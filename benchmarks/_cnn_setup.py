@@ -1,0 +1,130 @@
+"""Shared setup for the paper-reproduction benchmarks: train the three
+CNNs on the synthetic Tiny-ImageNet stand-in, cache the params, and build
+the fault-injected accuracy evaluator used by every table/figure."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FaultSpec, InferenceAccuracyEvaluator, PAPER_DEVICES)
+from repro.data import ImageClassData
+from repro.models.cnn import CNN_MODELS
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "cnn_params")
+NUM_CLASSES = 16
+IMG = 32
+WIDTH = 0.5
+DATA = ImageClassData(num_classes=NUM_CLASSES, img=IMG, seed=0)
+
+# Eyeriss is the fault-prone tier (aggressive voltage scaling, light ECC);
+# SIMBA's package has better protection (DESIGN.md / costmodel.py).
+DEVICE_FAULT_SCALE = np.array([d.fault_scale for d in PAPER_DEVICES])
+
+
+TRAIN_STEPS = {"alexnet": 500, "squeezenet": 1500, "resnet18": 800}
+
+
+def _train(model, key, steps=400, batch=64, lr=2e-3):
+    params = model.init(key, num_classes=NUM_CLASSES, width=WIDTH, img=IMG)
+
+    def loss_fn(p, x, y):
+        logits = model.apply(p, x)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step(p, opt, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+        new_p, new_opt = [], []
+        for pi, gi, oi in zip(jax.tree.leaves(p), jax.tree.leaves(g),
+                              jax.tree.leaves(opt)):
+            m = 0.9 * oi + gi
+            new_opt.append(m)
+            new_p.append(pi - lr * m)
+        td = jax.tree.structure(p)
+        return jax.tree.unflatten(td, new_p), jax.tree.unflatten(td, new_opt), loss
+
+    opt = jax.tree.map(jnp.zeros_like, params)
+    for i in range(steps):
+        x, y = DATA.batch(batch, seed=1000 + i)
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+    return params
+
+
+def _flatten(params):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        flat["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)] = np.asarray(leaf)
+    return flat
+
+
+def get_trained(name: str, steps=None):
+    """Train-or-load cached params for one of the paper's CNNs."""
+    steps = steps or TRAIN_STEPS.get(name, 500)
+    model = CNN_MODELS[name]
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{name}.npz")
+    template = model.init(jax.random.PRNGKey(0), num_classes=NUM_CLASSES,
+                          width=WIDTH, img=IMG)
+    if os.path.exists(path):
+        data = np.load(path)
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        ok = True
+        for p, leaf in flat_t[0]:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            if key not in data or data[key].shape != tuple(leaf.shape):
+                ok = False
+                break
+            leaves.append(jnp.asarray(data[key]))
+        if ok:
+            return jax.tree_util.tree_unflatten(flat_t[1], leaves)
+    params = _train(model, jax.random.PRNGKey(hash(name) % 2 ** 31),
+                    steps=steps)
+    np.savez(path, **_flatten(params))
+    return params
+
+
+def eval_batch(n=512, seed=99):
+    x, y = DATA.batch(n, seed=seed)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def make_evaluator(name: str, params, fault_spec: FaultSpec,
+                   n_eval=512) -> InferenceAccuracyEvaluator:
+    model = CNN_MODELS[name]
+    x, y = eval_batch(n_eval)
+
+    def apply_fn(p, xx, wr, ar, seed):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=seed)
+
+    return InferenceAccuracyEvaluator(apply_fn, params, x, y, fault_spec,
+                                      DEVICE_FAULT_SCALE)
+
+
+def accuracy_under_partition(name: str, params, partition: np.ndarray,
+                             weight_rate: float, act_rate: float,
+                             n_eval=512, seed=0) -> float:
+    """Top-1 accuracy with faults applied per the paper's platform-specific
+    strategy: each layer's rate = base rate x its device's fault scale."""
+    model = CNN_MODELS[name]
+    x, y = eval_batch(n_eval)
+    scale = DEVICE_FAULT_SCALE[partition]
+    wr = jnp.asarray(weight_rate * scale, jnp.float32)
+    ar = jnp.asarray(act_rate * scale, jnp.float32)
+    logits = model.apply(params, x, w_rates=wr, a_rates=ar, seed=seed)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+
+
+def clean_accuracy(name: str, params, n_eval=512) -> float:
+    model = CNN_MODELS[name]
+    x, y = eval_batch(n_eval)
+    logits = model.apply(params, x)
+    return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)))

@@ -1,0 +1,81 @@
+"""Aggregate results/dryrun/*.json into the §Roofline / §Dry-run tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--multi-pod]
+
+Emits a markdown table per mesh with the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory; plus
+the three hillclimb picks (worst useful ratio, most collective-bound,
+most paper-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(multi_pod: bool):
+    recs = []
+    suffix = "_mp.json" if multi_pod else "_sp.json"
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*{suffix}"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    return recs
+
+
+def fmt(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | compute s | memory s | collective s | bottleneck"
+          " | model/HLO flops | peak GiB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3g} "
+              f"| {rl['memory_s']:.3g} | {rl['collective_s']:.3g} "
+              f"| **{rl['bottleneck']}** "
+              f"| {r.get('useful_flop_ratio', 0):.2f} "
+              f"| {r['memory']['peak_bytes']/2**30:.2f} "
+              f"| {r['compile_s']} |")
+
+
+def picks(recs):
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        return
+    worst_useful = min(ok, key=lambda r: r.get("useful_flop_ratio", 1.0))
+    most_coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                    / max(r["roofline"]["step_time_lower_bound_s"], 1e-12))
+    print("\nhillclimb candidates:")
+    print(f"  worst useful-flops ratio: {worst_useful['arch']} x "
+          f"{worst_useful['shape']} "
+          f"({worst_useful.get('useful_flop_ratio', 0):.2f})")
+    print(f"  most collective-bound:    {most_coll['arch']} x "
+          f"{most_coll['shape']} "
+          f"(coll {most_coll['roofline']['collective_s']:.3g}s vs bound "
+          f"{most_coll['roofline']['step_time_lower_bound_s']:.3g}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true")
+    args = ap.parse_args()
+    meshes = [False, True] if args.both else [args.multi_pod]
+    for mp in meshes:
+        recs = load(mp)
+        fmt(recs, "Roofline — " + ("2x16x16 multi-pod" if mp
+                                   else "16x16 single pod"))
+        if not mp:
+            picks(recs)
+
+
+if __name__ == "__main__":
+    main()

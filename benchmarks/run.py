@@ -1,0 +1,209 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Outputs ``name,us_per_call,derived`` CSV lines (scaffold contract) plus
+human-readable tables; everything is also dumped to results/bench/*.json
+for EXPERIMENTS.md.
+
+  bench_fig3    — Fig. 3: Top-1 @ 20 % weight faults, 3 CNNs x 3 tools
+  bench_fig4    — Fig. 4: accuracy vs fault rate (ResNet18, 3 tools)
+  bench_table2  — Table II: acc/lat/energy, 3 fault scenarios x 3 tools
+  bench_kernels — fault-injection kernel path vs pure-jnp oracle
+  bench_nsga2   — partitioner throughput (evaluations/sec, convergence)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+# quick mode (default) uses pop/gen 30/25; --paper uses the paper's 60/60
+QUICK = "--paper" not in sys.argv
+POP, GEN = (30, 25) if QUICK else (60, 60)
+FAULT_RATE = 0.2
+
+
+def _partitioners(name, params, fault_spec):
+    from benchmarks._cnn_setup import make_evaluator
+    from repro.core import (AFarePart, CNNPartedLike, FaultUnawareBaseline,
+                            NSGA2Config, PAPER_DEVICES)
+    from repro.models.cnn import CNN_MODELS
+
+    layers = CNN_MODELS[name].layer_infos(num_classes=16, width=0.5, img=32)
+    cfg = NSGA2Config(population=POP, generations=GEN, seed=0)
+    ev = make_evaluator(name, params, fault_spec)
+    tools = {
+        "CNNParted": CNNPartedLike(layers, PAPER_DEVICES, nsga2_config=cfg),
+        "Flt-unaware": FaultUnawareBaseline(layers, PAPER_DEVICES,
+                                            nsga2_config=cfg),
+        "AFarePart": AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
+                               nsga2_config=cfg),
+    }
+    return layers, {k: v.optimize() for k, v in tools.items()}, ev
+
+
+_PLAN_CACHE: dict = {}
+
+
+def _plans(name):
+    from benchmarks._cnn_setup import get_trained
+    from repro.core import FaultSpec
+    if name not in _PLAN_CACHE:
+        params = get_trained(name)
+        spec = FaultSpec(weight_fault_rate=FAULT_RATE,
+                         act_fault_rate=FAULT_RATE, bits=8)
+        t0 = time.time()
+        layers, plans, ev = _partitioners(name, params, spec)
+        _PLAN_CACHE[name] = (params, layers, plans, ev, time.time() - t0)
+    return _PLAN_CACHE[name]
+
+
+def bench_fig3():
+    """Fig. 3: Top-1 accuracy under 20 % weight faults."""
+    from benchmarks._cnn_setup import accuracy_under_partition, clean_accuracy
+    rows = {}
+    for name in ("alexnet", "squeezenet", "resnet18"):
+        params, layers, plans, ev, opt_s = _plans(name)
+        clean = clean_accuracy(name, params)
+        row = {"clean": clean}
+        for tool, plan in plans.items():
+            acc = accuracy_under_partition(name, params, plan.partition,
+                                           weight_rate=FAULT_RATE,
+                                           act_rate=0.0)
+            row[tool] = acc
+        rows[name] = row
+        print(f"fig3.{name},{opt_s*1e6:.0f},clean={clean:.3f} " +
+              " ".join(f"{t}={v:.3f}" for t, v in row.items() if t != "clean"))
+    _dump("fig3", rows)
+    return rows
+
+
+def bench_fig4():
+    """Fig. 4: accuracy vs weight-fault rate for ResNet18."""
+    from benchmarks._cnn_setup import accuracy_under_partition
+    params, layers, plans, ev, _ = _plans("resnet18")
+    rows = {}
+    for rate in (0.1, 0.2, 0.3, 0.4):
+        t0 = time.time()
+        row = {tool: accuracy_under_partition(
+            name="resnet18", params=params, partition=plan.partition,
+            weight_rate=rate, act_rate=0.0) for tool, plan in plans.items()}
+        rows[f"{rate:.1f}"] = row
+        print(f"fig4.fr{rate:.1f},{(time.time()-t0)*1e6:.0f}," +
+              " ".join(f"{t}={v:.3f}" for t, v in row.items()))
+    _dump("fig4", rows)
+    return rows
+
+
+def bench_table2():
+    """Table II: acc/lat/energy under weight-only / input-only / both."""
+    from benchmarks._cnn_setup import accuracy_under_partition
+    scenarios = {"weight": (FAULT_RATE, 0.0), "input": (0.0, FAULT_RATE),
+                 "both": (FAULT_RATE, FAULT_RATE)}
+    out = {}
+    for name in ("alexnet", "squeezenet", "resnet18"):
+        params, layers, plans, ev, _ = _plans(name)
+        out[name] = {}
+        for tool, plan in plans.items():
+            entry = {"latency_ms": plan.latency * 1e3,
+                     "energy_mj": plan.energy * 1e3}
+            for sc, (wr, ar) in scenarios.items():
+                entry[f"acc_{sc}"] = accuracy_under_partition(
+                    name, params, plan.partition, wr, ar)
+            out[name][tool] = entry
+            print(f"table2.{name}.{tool},{plan.latency*1e6:.1f},"
+                  + " ".join(f"{k}={v:.4g}" for k, v in entry.items()))
+    _dump("table2", out)
+    return out
+
+
+def bench_kernels():
+    """Fused fault-injection kernel path vs oracle (CPU wall time; on TPU
+    the same pallas_call lowers to Mosaic — see kernels/)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.quant.fixedpoint import QuantSpec, quantize
+
+    rng = np.random.default_rng(0)
+    rows = {}
+    x = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+
+    def timeit(f, *a, n=20):
+        f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else \
+            f(*a).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = f(*a)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    us = timeit(lambda: ops.quant_bitflip_ref(x, jnp.int32(1),
+                                              jnp.float32(0.2), 4))
+    rows["quant_bitflip_ref_1Mx4B"] = us
+    print(f"kern.quant_bitflip_ref,{us:.0f},GBps={2*x.nbytes/us*1e6/1e9:.2f}")
+
+    q = quantize(x)[0]
+    us = timeit(lambda: ops.bitflip_ref(q, jnp.int32(1), jnp.float32(0.2), 4))
+    rows["bitflip_ref_1Mx4B"] = us
+    print(f"kern.bitflip_ref,{us:.0f},GBps={2*q.nbytes/us*1e6/1e9:.2f}")
+
+    w = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(16))
+    xx = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    us = timeit(lambda: ops.fault_matmul_ref(xx, qw, scale, jnp.int32(1),
+                                             jnp.float32(0.2), 4))
+    rows["fault_matmul_ref_256x1024x1024"] = us
+    flops = 2 * 256 * 1024 * 1024
+    print(f"kern.fault_matmul_ref,{us:.0f},GFLOPs={flops/us*1e6/1e9:.1f}")
+    _dump("kernels", rows)
+    return rows
+
+
+def bench_nsga2():
+    """Partitioner throughput and convergence."""
+    from repro.core import CostModel, NSGA2Config, PAPER_DEVICES, nsga2
+    from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
+    from repro.models.cnn import ResNet18
+
+    layers = ResNet18.layer_infos(num_classes=16, width=0.5, img=32)
+    cm = CostModel(layers, PAPER_DEVICES)
+    obj = ObjectiveFn(cm, SurrogateAccuracyEvaluator(cm))
+    t0 = time.time()
+    res = nsga2(obj, n_genes=len(layers), n_devices=2,
+                config=NSGA2Config(population=60, generations=60, seed=0),
+                violation_fn=obj.violation)
+    dt = time.time() - t0
+    evs = res.evaluations / dt
+    print(f"nsga2.surrogate_60x60,{dt*1e6:.0f},evals_per_s={evs:.0f} "
+          f"front={len(res.pareto_pop)}")
+    _dump("nsga2", {"seconds": dt, "evals_per_s": evs,
+                    "front_size": len(res.pareto_pop),
+                    "history_first": list(map(float, res.history[0])),
+                    "history_last": list(map(float, res.history[-1]))})
+    return evs
+
+
+def _dump(name, obj):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def main() -> None:
+    print("# benchmark,us_per_call,derived")
+    bench_kernels()
+    bench_nsga2()
+    bench_fig3()
+    bench_fig4()
+    bench_table2()
+
+
+if __name__ == "__main__":
+    main()

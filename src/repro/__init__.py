@@ -1,0 +1,3 @@
+"""repro: AFarePart — accuracy-aware fault-resilient partitioning, at pod scale."""
+
+__version__ = "1.0.0"

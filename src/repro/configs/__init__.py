@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.configs.registry import ARCH_IDS, cells, get_config, input_specs
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "ARCH_IDS", "cells",
+           "get_config", "input_specs"]

@@ -1,0 +1,180 @@
+"""Analytical per-layer latency/energy cost model.
+
+Replaces the paper's Timeloop (latency) + Accelergy (energy) runs with a
+reproducible offline analytical model over published accelerator
+characteristics.  The role is identical: produce layer-wise latency and
+energy estimates per device so the NSGA-II fitness function can score a
+layer->device mapping.
+
+Latency per (layer, device) is roofline-style:
+    t = max(MACs / peak_macs, bytes_moved / dram_bw) + fixed dispatch cost
+Energy:
+    e = MACs * pJ_per_mac + bytes_moved * pJ_per_byte + e_static * t
+
+Partition-level metrics add inter-device link transfer (latency+energy)
+at every boundary where P(l) != P(l+1).  The paper *excludes* link costs
+("currently excludes link latency and link energy"); ``include_link_costs``
+reproduces that default and the extended mode turns them on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "DeviceProfile", "LayerInfo", "CostModel",
+    "EYERISS", "SIMBA", "TPU_V5E", "TPU_V5E_LOWVOLT",
+    "PAPER_DEVICES", "POD_TIERS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One accelerator (paper: Eyeriss, SIMBA) or pod tier (scale-up)."""
+
+    name: str
+    peak_macs: float           # MAC/s (1 MAC = 2 FLOPs)
+    dram_bw: float             # bytes/s
+    sram_bytes: int            # on-chip buffer
+    mem_capacity: int          # max resident model bytes
+    pj_per_mac: float
+    pj_per_byte: float         # DRAM access energy
+    dispatch_s: float          # fixed per-layer launch overhead
+    fault_scale: float         # relative soft-error rate multiplier
+    link_bw: float             # bytes/s to the next device / off-chip
+    link_pj_per_byte: float
+
+
+# --- Paper's evaluation platforms ------------------------------------------
+# Eyeriss v2: 384 PEs @ ~200 MHz => ~76.8 GMAC/s; LPDDR-class BW.  The
+# low-power edge profile: best energy per MAC (aggressive voltage
+# scaling) — which is exactly why it is the fault-prone tier (reduced
+# ECC + DVFS, paper Sec. III-B): fault_scale 1.0.
+EYERISS = DeviceProfile(
+    name="eyeriss", peak_macs=76.8e9, dram_bw=12.8e9, sram_bytes=192 * 1024,
+    mem_capacity=512 * 2**20, pj_per_mac=0.35, pj_per_byte=6.0,
+    dispatch_s=20e-6, fault_scale=1.0, link_bw=1.0e9, link_pj_per_byte=8.0)
+
+# SIMBA (4-chiplet MCM slice): much faster, but package-level energy
+# includes the NoP (network-on-package) overhead => higher pJ/MAC; the
+# package has proper ECC => lower fault_scale.  This is the latency +
+# reliability tier; Eyeriss is the energy tier — the three-way tension
+# the paper's Pareto front trades over.
+SIMBA = DeviceProfile(
+    name="simba", peak_macs=2.0e12, dram_bw=64e9, sram_bytes=4 * 2**20,
+    mem_capacity=4 * 2**30, pj_per_mac=0.9, pj_per_byte=8.0,
+    dispatch_s=8e-6, fault_scale=0.35, link_bw=8.0e9, link_pj_per_byte=4.0)
+
+# --- Scale-up tiers (TPU v5e pods; used by the LM-arch integration) --------
+TPU_V5E = DeviceProfile(
+    name="tpu_v5e", peak_macs=98.5e12, dram_bw=819e9, sram_bytes=128 * 2**20,
+    mem_capacity=16 * 2**30, pj_per_mac=0.20, pj_per_byte=2.5,
+    dispatch_s=2e-6, fault_scale=0.1, link_bw=50e9, link_pj_per_byte=3.0)
+
+# A pod running aggressive DVFS (the paper's "fault-prone" tier analogue).
+TPU_V5E_LOWVOLT = DeviceProfile(
+    name="tpu_v5e_lowvolt", peak_macs=98.5e12, dram_bw=819e9,
+    sram_bytes=128 * 2**20, mem_capacity=16 * 2**30, pj_per_mac=0.13,
+    pj_per_byte=1.8, dispatch_s=2e-6, fault_scale=1.0, link_bw=50e9,
+    link_pj_per_byte=3.0)
+
+PAPER_DEVICES = (EYERISS, SIMBA)
+POD_TIERS = (TPU_V5E_LOWVOLT, TPU_V5E)   # tier 0 cheap+faulty, tier 1 reliable
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerInfo:
+    """Partitioning-granularity node of the model graph."""
+
+    name: str
+    kind: str                  # conv / attn / ffn / moe / ssm / rglru / ...
+    macs: float                # multiply-accumulates per sample
+    weight_bytes: float
+    act_in_bytes: float        # activation bytes entering the layer
+    act_out_bytes: float       # activation bytes leaving (link payload)
+    params: float = 0.0
+    # Profiled fault sensitivity: d(Top-1)/d(fault exposure) of this layer,
+    # filled by the layer-wise sweep (paper Sec. V-C strategy 1).
+    sensitivity: float = 0.0
+
+
+class CostModel:
+    """Vectorised latency/energy evaluation of layer->device mappings."""
+
+    def __init__(self, layers: list[LayerInfo], devices: tuple[DeviceProfile, ...],
+                 include_link_costs: bool = False, batch: int = 1):
+        self.layers = layers
+        self.devices = devices
+        self.include_link_costs = include_link_costs
+        self.batch = batch
+        L, D = len(layers), len(devices)
+        lat = np.zeros((L, D))
+        en = np.zeros((L, D))
+        fits = np.ones((L, D), bool)
+        for li, layer in enumerate(layers):
+            bytes_moved = (layer.weight_bytes + layer.act_in_bytes
+                           + layer.act_out_bytes) * 1.0
+            for di, dev in enumerate(devices):
+                t_compute = layer.macs * batch / dev.peak_macs
+                t_mem = bytes_moved * batch / dev.dram_bw
+                lat[li, di] = max(t_compute, t_mem) + dev.dispatch_s
+                en[li, di] = (layer.macs * batch * dev.pj_per_mac
+                              + bytes_moved * batch * dev.pj_per_byte) * 1e-12
+                en[li, di] += 0.0  # static power folded into pj constants
+                fits[li, di] = layer.weight_bytes <= dev.mem_capacity
+        self.lat = lat                     # [L, D] seconds
+        self.energy = en                   # [L, D] joules
+        self.fits = fits                   # [L, D] resource feasibility
+        self.act_out = np.array([l.act_out_bytes for l in layers]) * batch
+        self.weight_bytes = np.array([l.weight_bytes for l in layers])
+        self.sens = np.array([l.sensitivity for l in layers])
+        self.fault_scale = np.array([d.fault_scale for d in devices])
+        self.link_bw = np.array([d.link_bw for d in devices])
+        self.link_pj = np.array([d.link_pj_per_byte for d in devices])
+        self.mem_capacity = np.array([d.mem_capacity for d in devices])
+
+    # -- population-level evaluation (P: [N, L] int array) ------------------
+    def latency(self, P: np.ndarray) -> np.ndarray:
+        L = len(self.layers)
+        base = self.lat[np.arange(L)[None, :], P].sum(axis=1)
+        if self.include_link_costs:
+            cut = P[:, :-1] != P[:, 1:]                     # [N, L-1]
+            src = P[:, :-1]
+            t_link = self.act_out[None, :-1] / self.link_bw[src]
+            base = base + (cut * t_link).sum(axis=1)
+        return base
+
+    def energy_of(self, P: np.ndarray) -> np.ndarray:
+        L = len(self.layers)
+        base = self.energy[np.arange(L)[None, :], P].sum(axis=1)
+        if self.include_link_costs:
+            cut = P[:, :-1] != P[:, 1:]
+            src = P[:, :-1]
+            e_link = self.act_out[None, :-1] * self.link_pj[src] * 1e-12
+            base = base + (cut * e_link).sum(axis=1)
+        return base
+
+    def violation(self, P: np.ndarray) -> np.ndarray:
+        """Resource-constraint violation (0 = feasible): total weight bytes
+        mapped to each device must fit its memory capacity."""
+        N, L = P.shape
+        D = len(self.devices)
+        v = np.zeros(N)
+        for d in range(D):
+            load = ((P == d) * self.weight_bytes[None, :]).sum(axis=1)
+            over = np.maximum(0.0, load - self.mem_capacity[d])
+            v += over / max(self.weight_bytes.sum(), 1.0)
+        return v
+
+    def sensitivity_surrogate(self, P: np.ndarray) -> np.ndarray:
+        """Surrogate ΔAcc: sum of per-layer profiled sensitivities weighted
+        by the fault exposure of the device each layer landed on.  Used for
+        LM-scale archs where per-candidate fault-injected Top-1 evaluation
+        is infeasible; calibrated against true evaluation on the CNNs."""
+        exposure = self.fault_scale[P]                     # [N, L]
+        return (exposure * self.sens[None, :]).sum(axis=1)
+
+    def fault_exposure(self, P: np.ndarray) -> np.ndarray:
+        """Mean fault-rate multiplier seen by the model under P (diagnostic)."""
+        return self.fault_scale[P].mean(axis=1)

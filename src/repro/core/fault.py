@@ -1,0 +1,134 @@
+"""Fault model and threat surface (paper Sec. III).
+
+Transient soft errors: independent per-bit flips on the ``faulty_bits``
+least-significant bits of N_q-bit fixed-point tensors, at per-bit rate
+``fault_rate``.  Two domains (paper Sec. III-B):
+
+  * weight faults   — bit-flips in stored, quantized parameters;
+  * activation faults — bit-flips in layer inputs / intermediate
+    activations (noisy interconnect, voltage dips, EM injection).
+
+Two injection strategies (paper Sec. V-C):
+  * layer-wise sweep      — faults in one layer at a time;
+  * platform-targeted     — faults on all layers mapped to a device.
+
+Everything is purely functional: a ``FaultSpec`` + integer seed fully
+determines the corruption, so candidate evaluations in NSGA-II are
+reproducible (the paper explicitly calls out non-reproducible mappings
+under transient faults as a problem — determinism here solves it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.quant.fixedpoint import QuantSpec
+
+__all__ = ["FaultSpec", "FaultContext", "corrupt_tensor", "corrupt_tree",
+           "layer_seed", "PAPER_FAULT_SPEC"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fault configuration (paper Sec. VI-B example config)."""
+
+    weight_fault_rate: float = 0.2     # per-bit flip probability, weights
+    act_fault_rate: float = 0.2        # per-bit flip probability, activations
+    faulty_bits: int = 4               # b vulnerable LSBs
+    bits: int = 16                     # N_q fixed-point width
+    enabled: bool = True
+
+    @property
+    def quant_spec(self) -> QuantSpec:
+        return QuantSpec(bits=self.bits)
+
+    def off(self) -> "FaultSpec":
+        return dataclasses.replace(self, enabled=False)
+
+    def with_rate(self, rate: float) -> "FaultSpec":
+        return dataclasses.replace(self, weight_fault_rate=rate,
+                                   act_fault_rate=rate)
+
+
+# The paper's example configuration: 16-bit fixed point, 4 LSBs, FR=0.2.
+PAPER_FAULT_SPEC = FaultSpec()
+
+
+def layer_seed(base_seed: int, layer_idx: int, domain: int) -> jnp.ndarray:
+    """Deterministic per-(layer, domain) seed; domain 0=weights 1=acts."""
+    return jnp.int32((base_seed * 1000003 + layer_idx * 8191 + domain * 131)
+                     & 0x7FFFFFFF)
+
+
+def corrupt_tensor(x: jax.Array, spec: FaultSpec, seed, *,
+                   domain: str = "weight") -> jax.Array:
+    """Quantize -> LSB-flip -> dequantize a float tensor (fused kernel)."""
+    rate = spec.weight_fault_rate if domain == "weight" else spec.act_fault_rate
+    if not spec.enabled or rate <= 0.0:
+        return x
+    return ops.quant_bitflip(x, seed, rate, spec.faulty_bits, spec.quant_spec)
+
+
+def corrupt_tree(tree, spec: FaultSpec, base_seed: int, *,
+                 domain: str = "weight"):
+    """Corrupt every float leaf of a pytree with leaf-distinct seeds."""
+    if not spec.enabled:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(corrupt_tensor(leaf, spec,
+                                      layer_seed(base_seed, i, 0), domain=domain))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultContext:
+    """Binds a FaultSpec to a concrete layer->device partition.
+
+    ``device_fault_scale[d]`` scales the base fault rates per device tier
+    (a reliable cloud-class tier has ~0 rate; an aggressive low-voltage
+    edge tier has 1.0+).  ``layer_on_faulty[l]`` is the effective per-bit
+    rate multiplier for layer l under partition P — this is the paper's
+    "fault domain constraint": faults only hit layers mapped to
+    fault-prone devices.
+    """
+
+    spec: FaultSpec
+    partition: tuple[int, ...]              # layer -> device id
+    device_fault_scale: tuple[float, ...]   # device id -> rate multiplier
+    base_seed: int = 0
+
+    def layer_rate(self, layer_idx: int, domain: str) -> float:
+        base = (self.spec.weight_fault_rate if domain == "weight"
+                else self.spec.act_fault_rate)
+        if not self.spec.enabled:
+            return 0.0
+        d = self.partition[layer_idx]
+        return float(base) * float(self.device_fault_scale[d])
+
+    def corrupt(self, x: jax.Array, layer_idx: int, *,
+                domain: str = "weight") -> jax.Array:
+        rate = self.layer_rate(layer_idx, domain)
+        if rate <= 0.0:
+            return x
+        seed = layer_seed(self.base_seed, layer_idx, 0 if domain == "weight" else 1)
+        return ops.quant_bitflip(x, seed, rate, self.spec.faulty_bits,
+                                 self.spec.quant_spec)
+
+
+def empirical_flip_rate(q_clean: jax.Array, q_faulty: jax.Array,
+                        faulty_bits: int) -> float:
+    """Measured per-bit flip fraction over the vulnerable LSB range."""
+    diff = jnp.bitwise_xor(q_clean.astype(jnp.int32), q_faulty.astype(jnp.int32))
+    flips = 0
+    for i in range(faulty_bits):
+        flips = flips + jnp.sum((diff >> i) & 1)
+    return float(flips) / (q_clean.size * faulty_bits)

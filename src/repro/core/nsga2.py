@@ -1,0 +1,195 @@
+"""NSGA-II multi-objective evolutionary optimizer (Deb et al. 2002).
+
+Vectorised implementation specialised for discrete layer->device
+chromosomes.  All population-level operators (dominance matrix,
+front peeling, crowding distance, tournament, crossover, mutation)
+are O(N^2·M) numpy array ops — no Python-level per-individual loops in
+the hot path.  Fitness evaluation is delegated to a user callback which
+may itself be a jitted/vmapped JAX function.
+
+Supports Deb's constrained-dominance rules: feasible individuals
+dominate infeasible ones; among infeasible, smaller violation wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["NSGA2Config", "NSGA2Result", "nsga2", "fast_non_dominated_sort",
+           "crowding_distance", "pareto_mask"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NSGA2Config:
+    population: int = 60           # paper Sec. VI-A: pop 60
+    generations: int = 60          # paper Sec. VI-A: 60 generations
+    crossover_rate: float = 0.9
+    mutation_rate: float = 0.08    # per-gene
+    tournament_k: int = 2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class NSGA2Result:
+    pareto_pop: np.ndarray        # [F, L] chromosomes on the final front
+    pareto_objs: np.ndarray       # [F, M]
+    history: list                 # per-generation best objective vector
+    evaluations: int
+
+
+def _dominance_matrix(F: np.ndarray, violation: np.ndarray | None) -> np.ndarray:
+    """dom[i, j] == True iff i constrained-dominates j (minimisation)."""
+    le = (F[:, None, :] <= F[None, :, :]).all(axis=2)
+    lt = (F[:, None, :] < F[None, :, :]).any(axis=2)
+    dom = le & lt
+    if violation is not None:
+        feas = violation <= 0.0
+        both_infeas = ~feas[:, None] & ~feas[None, :]
+        # feasible dominates infeasible
+        dom = np.where(feas[:, None] & ~feas[None, :], True, dom)
+        dom = np.where(~feas[:, None] & feas[None, :], False, dom)
+        # among infeasible: strictly smaller violation dominates
+        dom = np.where(both_infeas,
+                       violation[:, None] < violation[None, :], dom)
+    np.fill_diagonal(dom, False)
+    return dom
+
+
+def fast_non_dominated_sort(F: np.ndarray,
+                            violation: np.ndarray | None = None) -> np.ndarray:
+    """Returns rank[i] (0 = first/best front)."""
+    n = F.shape[0]
+    dom = _dominance_matrix(F, violation)
+    n_dominators = dom.sum(axis=0)       # how many dominate i
+    ranks = np.full(n, -1, dtype=np.int64)
+    current = np.where(n_dominators == 0)[0]
+    r = 0
+    remaining = n_dominators.astype(np.int64).copy()
+    while current.size:
+        ranks[current] = r
+        # removing `current` decrements dominator counts of their dominatees
+        dec = dom[current].sum(axis=0)
+        remaining = remaining - dec
+        remaining[current] = -1          # never reselected
+        current = np.where(remaining == 0)[0]
+        r += 1
+    return ranks
+
+
+def crowding_distance(F: np.ndarray, ranks: np.ndarray) -> np.ndarray:
+    """Per-individual crowding distance within its front."""
+    n, m = F.shape
+    dist = np.zeros(n)
+    for r in np.unique(ranks):
+        idx = np.where(ranks == r)[0]
+        if idx.size <= 2:
+            dist[idx] = np.inf
+            continue
+        for k in range(m):
+            order = idx[np.argsort(F[idx, k], kind="stable")]
+            f = F[order, k]
+            span = f[-1] - f[0]
+            dist[order[0]] = dist[order[-1]] = np.inf
+            if span > 0:
+                dist[order[1:-1]] += (f[2:] - f[:-2]) / span
+    return dist
+
+
+def pareto_mask(F: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows of F."""
+    return fast_non_dominated_sort(F) == 0
+
+
+def _tournament(rng, ranks, crowd, k, n_pick):
+    n = ranks.shape[0]
+    cand = rng.integers(0, n, size=(n_pick, k))
+    # lexicographic: lower rank first, higher crowding second
+    key = ranks[cand] * 1e9 - np.minimum(crowd[cand], 1e8)
+    return cand[np.arange(n_pick), np.argmin(key, axis=1)]
+
+
+def _crossover(rng, parents_a, parents_b, rate):
+    """Uniform crossover on integer chromosomes."""
+    n, L = parents_a.shape
+    do = rng.random(n) < rate
+    mask = rng.random((n, L)) < 0.5
+    child = np.where(mask, parents_a, parents_b)
+    return np.where(do[:, None], child, parents_a)
+
+
+def _mutate(rng, pop, n_devices, rate):
+    n, L = pop.shape
+    mask = rng.random((n, L)) < rate
+    rand = rng.integers(0, n_devices, size=(n, L))
+    return np.where(mask, rand, pop)
+
+
+def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
+          n_genes: int, n_devices: int, config: NSGA2Config = NSGA2Config(),
+          violation_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+          initial_pop: np.ndarray | None = None,
+          callback: Callable[[int, np.ndarray, np.ndarray], None] | None = None,
+          ) -> NSGA2Result:
+    """Minimise the vector objective eval_fn over integer chromosomes.
+
+    Args:
+      eval_fn: [N, L] int chromosomes -> [N, M] objective matrix (minimise).
+      n_genes: chromosome length L (number of layers).
+      n_devices: alphabet size D (number of devices/tiers).
+      violation_fn: optional [N, L] -> [N] constraint violation (<=0 feasible).
+      initial_pop: optional seed population (e.g. the previous deployment
+        for the online re-optimization phase).
+      callback: called each generation with (gen, pop, objs).
+    """
+    rng = np.random.default_rng(config.seed)
+    N = config.population
+    if initial_pop is not None:
+        pop = np.asarray(initial_pop, dtype=np.int64)
+        if pop.shape[0] < N:   # top up with random individuals
+            extra = rng.integers(0, n_devices, size=(N - pop.shape[0], n_genes))
+            pop = np.concatenate([pop, extra], axis=0)
+        pop = pop[:N]
+    else:
+        pop = rng.integers(0, n_devices, size=(N, n_genes))
+
+    objs = np.asarray(eval_fn(pop), dtype=np.float64)
+    viol = violation_fn(pop) if violation_fn is not None else None
+    evaluations = N
+    history = []
+
+    for g in range(config.generations):
+        ranks = fast_non_dominated_sort(objs, viol)
+        crowd = crowding_distance(objs, ranks)
+        pa = _tournament(rng, ranks, crowd, config.tournament_k, N)
+        pb = _tournament(rng, ranks, crowd, config.tournament_k, N)
+        children = _crossover(rng, pop[pa], pop[pb], config.crossover_rate)
+        children = _mutate(rng, children, n_devices, config.mutation_rate)
+
+        child_objs = np.asarray(eval_fn(children), dtype=np.float64)
+        child_viol = violation_fn(children) if violation_fn is not None else None
+        evaluations += N
+
+        # (mu + lambda) elitist environmental selection
+        allpop = np.concatenate([pop, children], axis=0)
+        allobjs = np.concatenate([objs, child_objs], axis=0)
+        allviol = (np.concatenate([viol, child_viol])
+                   if viol is not None else None)
+        aranks = fast_non_dominated_sort(allobjs, allviol)
+        acrowd = crowding_distance(allobjs, aranks)
+        order = np.lexsort((-acrowd, aranks))
+        keep = order[:N]
+        pop, objs = allpop[keep], allobjs[keep]
+        viol = allviol[keep] if allviol is not None else None
+        history.append(objs.min(axis=0))
+        if callback is not None:
+            callback(g, pop, objs)
+
+    ranks = fast_non_dominated_sort(objs, viol)
+    front = ranks == 0
+    # deduplicate identical chromosomes on the front
+    fpop, fidx = np.unique(pop[front], axis=0, return_index=True)
+    fobjs = objs[front][fidx]
+    return NSGA2Result(pareto_pop=fpop, pareto_objs=fobjs,
+                       history=history, evaluations=evaluations)

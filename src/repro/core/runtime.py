@@ -1,0 +1,146 @@
+"""AFarePart online phase (paper Alg. 1, lines 13-19): dynamic
+accuracy-aware repartitioning.
+
+Deploy the most robust Pareto partition P*; monitor the observed
+accuracy drop; when ΔAcc(P*) > θ, re-invoke NSGA-II with *current*
+runtime statistics (``RunNSGAIIWithCurrentStats``) — i.e. the device
+fault scales estimated from telemetry, and the current population
+seeded with the deployed partition — then hot-swap to the new P'.
+
+The environment simulator models what the paper's FPGA deployment
+would observe: per-device fault-rate multipliers that drift/step over
+time (a pod starts glitching, EM interference appears, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.nsga2 import NSGA2Config
+from repro.core.partitioner import PartitionPlan, _BasePartitioner
+
+__all__ = ["ReconfigEvent", "OnlineReconfigurator", "FaultEnvironment",
+           "simulate_deployment"]
+
+
+@dataclasses.dataclass
+class ReconfigEvent:
+    step: int
+    observed_delta_acc: float
+    old_partition: np.ndarray
+    new_partition: np.ndarray
+    new_predicted_delta_acc: float
+
+
+@dataclasses.dataclass
+class FaultEnvironment:
+    """Time-varying per-device fault-rate multipliers.
+
+    ``schedule`` maps step -> array[D] of multipliers; steps between
+    entries hold the previous value (step function).
+    """
+
+    base_scale: np.ndarray
+    schedule: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def scales_at(self, step: int) -> np.ndarray:
+        scales = self.base_scale.copy()
+        for s in sorted(self.schedule):
+            if s <= step:
+                scales = np.asarray(self.schedule[s], dtype=float)
+        return scales
+
+
+class OnlineReconfigurator:
+    """Implements the monitor/trigger/swap loop around a partitioner."""
+
+    def __init__(self, partitioner: _BasePartitioner, plan: PartitionPlan,
+                 theta: float = 0.01,
+                 observe_fn: Callable[[np.ndarray, np.ndarray], float] | None = None,
+                 reopt_generations: int = 15):
+        """
+        Args:
+          partitioner: the (fault-aware) partitioner to re-invoke.
+          plan: offline Pareto plan currently deployed.
+          theta: accuracy-drop threshold θ (paper uses 1%).
+          observe_fn: (partition, device_scales) -> observed ΔAcc.  In a
+            real deployment this is telemetry; in simulation it is the
+            true fault-injected evaluation under the current environment.
+          reopt_generations: budget of the online re-optimization (smaller
+            than offline: it must respond quickly).
+        """
+        self.partitioner = partitioner
+        self.plan = plan
+        self.theta = theta
+        self.observe_fn = observe_fn
+        self.reopt_generations = reopt_generations
+        self.events: list[ReconfigEvent] = []
+
+    @property
+    def partition(self) -> np.ndarray:
+        return self.plan.partition
+
+    def step(self, step_idx: int, device_scales: np.ndarray) -> float:
+        """One monitoring tick.  Returns the observed ΔAcc."""
+        observed = float(self.observe_fn(self.plan.partition, device_scales))
+        if observed > self.theta:
+            self._reconfigure(step_idx, observed, device_scales)
+        return observed
+
+    def _reconfigure(self, step_idx: int, observed: float,
+                     device_scales: np.ndarray):
+        """RunNSGAIIWithCurrentStats(): refresh the evaluator's view of the
+        environment, re-run a short NSGA-II seeded with the current
+        deployment + previous front, and swap to the new most-robust P'."""
+        old = self.plan.partition.copy()
+        # Current runtime stats: update the fault scales the evaluator uses.
+        ev = self.partitioner.objective.acc_evaluator
+        if ev is not None and hasattr(ev, "device_fault_scale"):
+            ev.device_fault_scale = np.asarray(device_scales, np.float32)
+            if hasattr(ev, "_cache"):
+                ev._cache.clear()      # environment changed; scores stale
+            if hasattr(ev, "_clean"):
+                ev._clean = None
+        if ev is not None and hasattr(ev, "cm"):
+            ev.cm.fault_scale = np.asarray(device_scales)   # surrogate path
+        if hasattr(self.partitioner.cost_model, "fault_scale"):
+            self.partitioner.cost_model.fault_scale = np.asarray(device_scales)
+
+        cfg = self.partitioner.config
+        self.partitioner.config = NSGA2Config(
+            population=cfg.population,
+            generations=self.reopt_generations,
+            crossover_rate=cfg.crossover_rate,
+            mutation_rate=cfg.mutation_rate,
+            tournament_k=cfg.tournament_k,
+            seed=cfg.seed + step_idx + 1)
+        try:
+            seed_pop = np.concatenate(
+                [old[None, :], self.plan.front], axis=0)
+            new_plan = self.partitioner.optimize(initial_pop=seed_pop)
+        finally:
+            self.partitioner.config = cfg
+        self.events.append(ReconfigEvent(
+            step=step_idx, observed_delta_acc=observed,
+            old_partition=old, new_partition=new_plan.partition.copy(),
+            new_predicted_delta_acc=new_plan.delta_acc))
+        self.plan = new_plan
+
+
+def simulate_deployment(reconfigurator: OnlineReconfigurator,
+                        environment: FaultEnvironment, n_steps: int,
+                        ) -> dict:
+    """Run the online loop against a fault environment; returns the log."""
+    observed = []
+    partitions = []
+    for t in range(n_steps):
+        scales = environment.scales_at(t)
+        observed.append(reconfigurator.step(t, scales))
+        partitions.append(reconfigurator.partition.copy())
+    return {
+        "observed_delta_acc": np.asarray(observed),
+        "partitions": partitions,
+        "events": reconfigurator.events,
+    }

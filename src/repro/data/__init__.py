@@ -1,0 +1,3 @@
+from repro.data.synthetic import ImageClassData, TokenStream
+
+__all__ = ["ImageClassData", "TokenStream"]

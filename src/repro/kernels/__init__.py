@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import bitflip, fault_matmul, quant_bitflip
+
+__all__ = ["ops", "ref", "bitflip", "fault_matmul", "quant_bitflip"]

@@ -1,0 +1,110 @@
+"""Fault-injected matmul: ``x @ dequant(bitflip(q_w))`` as one Pallas kernel.
+
+Beyond-paper TPU adaptation: the paper corrupts stored weights, writes
+them back, then runs inference.  On TPU the weight tile must travel
+HBM->VMEM for the matmul anyway — so we flip bits on the *VMEM tile*
+right after load and feed the corrupted tile straight into the MXU.
+Fault-injected evaluation then costs zero extra HBM traffic relative to
+a clean matmul.
+
+Blocking: (bm x bk) @ (bk x bn) with a float32 VMEM accumulator,
+k-innermost grid, MXU-aligned 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bitflip import _uniform
+
+
+def _fault_matmul_kernel(scale_ref, seed_ref, rate_ref, x_ref, w_ref, o_ref,
+                         acc_ref, *, faulty_bits: int, bk: int, bn: int,
+                         n_total: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qw = w_ref[...].astype(jnp.int32)
+    seed = seed_ref[0, 0].astype(jnp.uint32)
+    rate = rate_ref[0, 0]
+    # Flat index of each weight element in the full *unpadded* (K, N)
+    # matrix — must match ref.bitflip_ref exactly.  Padded columns alias
+    # into later rows' indices, but their outputs are sliced away and
+    # padded K-rows multiply zero-padded x columns, so results are exact.
+    base_k = pl.program_id(2) * bk
+    base_n = pl.program_id(1) * bn
+    rows = jax.lax.broadcasted_iota(jnp.uint32, qw.shape, 0) + jnp.uint32(base_k)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, qw.shape, 1) + jnp.uint32(base_n)
+    idx = rows * jnp.uint32(n_total) + cols
+    mask = jnp.zeros(qw.shape, dtype=jnp.int32)
+    for i in range(faulty_bits):
+        u = _uniform(idx, seed, i)
+        mask = mask | jnp.where(u < rate, 1 << i, 0)
+    w = ((qw ^ mask).astype(jnp.float32)) * scale_ref[0, 0]
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("faulty_bits", "bm", "bk", "bn", "interpret"))
+def fault_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
+                        seed: jax.Array, fault_rate, faulty_bits: int, *,
+                        bm: int = 256, bk: int = 512, bn: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """x: (M, K) float; qw: (K, N) int (quantized weights); scale: scalar.
+
+    Returns (M, N) in x.dtype with fp32 accumulation.  Shapes are padded
+    to block multiples; padded weight rows multiply padded x columns of
+    zeros, so results are exact.
+    """
+    assert x.ndim == 2 and qw.ndim == 2 and x.shape[1] == qw.shape[0]
+    m, k = x.shape
+    _, n = qw.shape
+    bm = min(bm, max(8, m))
+    bk = min(bk, max(128, k))
+    bn = min(bn, max(128, n))
+
+    def pad_to(a, r, c):
+        pr, pc = -a.shape[0] % r, -a.shape[1] % c
+        if pr or pc:
+            a = jnp.pad(a, ((0, pr), (0, pc)))
+        return a
+
+    xp = pad_to(x, bm, bk)
+    wp = pad_to(qw, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fault_matmul_kernel,
+            faulty_bits=max(0, faulty_bits), bk=bk, bn=bn, n_total=n,
+            k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),   # scale
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),   # seed
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),   # rate
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(scale.reshape(1, 1).astype(jnp.float32),
+      jnp.asarray(seed, jnp.int32).reshape(1, 1),
+      jnp.asarray(fault_rate, jnp.float32).reshape(1, 1), xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,58 @@
+"""Public jit'd entry points for the fault-injection kernels.
+
+``INTERPRET`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET env var) and the same code lowers to Mosaic.
+
+Fault rates are traced scalars: one executable per (shape, faulty_bits)
+serves every rate the optimizer asks for.  Every op has a ``*_ref``
+oracle in ``ref.py``; tests sweep shapes/dtypes asserting exact equality.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.bitflip import bitflip_pallas
+from repro.kernels.fault_matmul import fault_matmul_pallas
+from repro.kernels.quant_bitflip import quant_bitflip_pallas
+from repro.quant.fixedpoint import QuantSpec
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+__all__ = ["bitflip", "quant_bitflip", "fault_matmul", "INTERPRET"]
+
+
+def bitflip(q: jax.Array, seed, fault_rate, faulty_bits: int) -> jax.Array:
+    """Alg. 2: flip each of the `faulty_bits` LSBs with prob `fault_rate`."""
+    if isinstance(fault_rate, (int, float)) and fault_rate <= 0.0:
+        return q
+    return bitflip_pallas(q, jnp.asarray(seed, jnp.int32),
+                          jnp.asarray(fault_rate, jnp.float32),
+                          faulty_bits, interpret=INTERPRET)
+
+
+def quant_bitflip(x: jax.Array, seed, fault_rate, faulty_bits: int,
+                  spec: QuantSpec = QuantSpec()) -> jax.Array:
+    """Fused quantize -> flip -> dequantize on a float tensor."""
+    return quant_bitflip_pallas(x, jnp.asarray(seed, jnp.int32),
+                                jnp.asarray(fault_rate, jnp.float32),
+                                faulty_bits, spec, interpret=INTERPRET)
+
+
+def fault_matmul(x: jax.Array, qw: jax.Array, scale, seed, fault_rate,
+                 faulty_bits: int) -> jax.Array:
+    """x @ dequant(bitflip(qw)) with zero extra HBM traffic."""
+    return fault_matmul_pallas(x, qw, jnp.asarray(scale, jnp.float32),
+                               jnp.asarray(seed, jnp.int32),
+                               jnp.asarray(fault_rate, jnp.float32),
+                               faulty_bits, interpret=INTERPRET)
+
+
+# Re-export oracles for tests/benchmarks.
+bitflip_ref = _ref.bitflip_ref
+quant_bitflip_ref = _ref.quant_bitflip_ref
+fault_matmul_ref = _ref.fault_matmul_ref

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing a
+single CPU device; only the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512``.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model); the leading pod
+    axis carries the AFarePart pipeline stages."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over the real local device(s) for CPU tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,217 @@
+"""Pipeline parallelism over the ``pod`` mesh axis, driven by AFarePart.
+
+The paper's layer->device mapping becomes the pipeline-stage assignment:
+``contiguous_stages`` converts the NSGA-II partition into contiguous
+group-granular cut points; each pod holds one stage's (padded) stack of
+layer groups.
+
+Formulation: pure GSPMD ("shifting buffer"), no manual collectives.
+The live activations of all stages form one array
+``state: [n_stages, Bm, S, D]`` sharded P("pod", "data", ...).  Each
+GPipe tick:
+
+    1. inject the next microbatch's embeddings into slot 0,
+    2. out = vmap(stage_forward)(stage_params, state) — the vmapped
+       stage axis is pod-sharded, so every pod computes exactly its
+       stage with zero communication,
+    3. read slot n_stages-1, unembed + CE for the microbatch that just
+       completed,
+    4. shift: state <- concat([zeros, out[:-1]]) — GSPMD lowers the
+       pod-sharded-axis shift to a collective-permute between pods.
+
+Embedding only feeds slot 0 and the head only reads the last slot, so
+neither is duplicated across pods.  AD through the ticks gives the
+standard GPipe backward schedule.  (An earlier shard_map(manual='pod')
+implementation hit an XLA SPMD-partitioner CHECK at 512 devices —
+partial-manual + attention reductions; the shifting formulation avoids
+partial-manual sharding entirely.  See EXPERIMENTS.md §Dry-run.)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import (_block_fwd, _encode, embed_tokens,
+                                      unembed)
+from repro.train.train_step import cross_entropy_loss
+
+__all__ = ["stage_stack", "stage_param_specs", "make_pp_loss",
+           "group_cuts"]
+
+
+def group_cuts(layer_cuts: list[int], cfg: ArchConfig) -> list[int]:
+    """Layer-granular AFarePart cuts -> group-granular pipeline cuts."""
+    Pn = len(cfg.block_pattern)
+    G = cfg.n_groups
+    cuts = [0]
+    for c in layer_cuts[1:-1]:
+        g = min(max(round(c / Pn), cuts[-1] + 1), G - 1)
+        cuts.append(g)
+    cuts.append(G)
+    return cuts
+
+
+def stage_stack(group_params, cuts: list[int]):
+    """[G, ...] leaves -> [n_stages, Lmax, ...] zero-padded stage stacks."""
+    n_stages = len(cuts) - 1
+    lens = [cuts[i + 1] - cuts[i] for i in range(n_stages)]
+    lmax = max(lens)
+
+    def restack(x):
+        pieces = []
+        for i in range(n_stages):
+            piece = x[cuts[i]:cuts[i + 1]]
+            pad = lmax - piece.shape[0]
+            if pad:
+                piece = jnp.concatenate(
+                    [piece, jnp.zeros((pad,) + piece.shape[1:], piece.dtype)],
+                    axis=0)
+            pieces.append(piece)
+        return jnp.stack(pieces)
+
+    return jax.tree.map(restack, group_params), lens
+
+
+def stage_param_specs(stage_params, mesh=None) -> Any:
+    """P("pod", None, <single-pod trailing rules>) for stage stacks."""
+    from repro.launch.shardings import _divisible, _leaf_spec, logical_name
+    flat, treedef = jax.tree_util.tree_flatten_with_path(stage_params)
+    specs = []
+    for path, leaf in flat:
+        base = tuple(_divisible(_leaf_spec(logical_name(path), leaf.ndim - 2),
+                                leaf.shape[2:], mesh))
+        specs.append(P("pod", None, *base))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _stage_forward(cfg: ArchConfig, stage_groups, my_len, my_offset, x,
+                   positions, memory=None, mem_pos=None, kv_chunk: int = 1024,
+                   ssd_chunk: int = 256, unroll: bool = False):
+    """Apply one stage's layer groups (masked scan over padded slots)."""
+    Pn = len(cfg.block_pattern)
+
+    if cfg.is_encdec:
+        def body(carry, gp):
+            x, idx = carry
+            h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
+            x_new = x + L.attention_fwd(
+                gp["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, kv_chunk=kv_chunk)
+            h = L.norm_fwd(gp["ln_x"], x_new, cfg.norm_kind)
+            x_new = x_new + L.attention_fwd(
+                gp["xattn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, memory=memory, memory_pos=mem_pos)
+            h = L.norm_fwd(gp["ln2"], x_new, cfg.norm_kind)
+            x_new = x_new + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+            x = jnp.where(idx < my_len, x_new, x)
+            return (x, idx + 1), None
+
+        (x, _), _ = jax.lax.scan(body, (x, 0), stage_groups, unroll=unroll)
+        return x
+
+    def body(carry, gp):
+        x, idx = carry
+        g_global = my_offset + idx
+        for s, kind in enumerate(cfg.block_pattern):
+            lidx = g_global * Pn + s
+            x_new, _ = _block_fwd(cfg, kind, gp[f"b{s}"], x, positions,
+                                  kv_chunk=kv_chunk, ssd_chunk=ssd_chunk,
+                                  unroll=unroll)
+            valid = (idx < my_len) & (lidx < cfg.n_layers)
+            x = jnp.where(valid, x_new, x)
+        return (x, idx + 1), None
+
+    (x, _), _ = jax.lax.scan(body, (x, 0), stage_groups, unroll=unroll)
+    return x
+
+
+def make_pp_loss(cfg: ArchConfig, mesh, cuts_g: list[int], n_micro: int,
+                 *, kv_chunk: int = 1024, ssd_chunk: int = 256,
+                 unroll: bool = False):
+    """Returns loss_fn(pp_params, batch) running the shifting-buffer GPipe
+    schedule described in the module docstring."""
+    n_stages = len(cuts_g) - 1
+    lens = jnp.asarray([cuts_g[i + 1] - cuts_g[i] for i in range(n_stages)])
+    offs = jnp.asarray(cuts_g[:-1])
+    state_spec = P("pod", "data", None, None)
+
+    def loss_fn(pp_params, batch):
+        stages_params = pp_params["stages"]
+        toks = batch.get("tokens")
+        embeds = batch.get("embeds")
+        labels = batch["labels"]
+        src = toks if toks is not None else embeds
+        B, S = src.shape[0], src.shape[1]
+        assert B % n_micro == 0, (B, n_micro)
+        Bm = B // n_micro
+
+        def mb(x):
+            return (x.reshape((n_micro, Bm) + x.shape[1:])
+                    if x is not None else None)
+
+        toks_mb, embeds_mb, labels_mb = mb(toks), mb(embeds), mb(labels)
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        memory_mb = mem_pos = None
+        if cfg.is_encdec:
+            # encode per microbatch; stage s consumes microbatch (t - s)'s
+            # memory at tick t, so the vmapped stage gets a per-stage slice
+            enc = batch["enc_embeds"].reshape(
+                (n_micro, Bm) + batch["enc_embeds"].shape[1:])
+            memory_mb = jax.vmap(
+                lambda e: _encode(cfg, pp_params, e, unroll=unroll))(enc)
+            mem_pos = jnp.arange(memory_mb.shape[2], dtype=jnp.int32)
+
+        def embed_mb(i):
+            if embeds_mb is not None:
+                return jax.lax.dynamic_index_in_dim(
+                    embeds_mb, i, 0, keepdims=False).astype(cfg.jdtype)
+            t = jax.lax.dynamic_index_in_dim(toks_mb, i, 0, keepdims=False)
+            return embed_tokens(cfg, pp_params, t)
+
+        def run_stage(gp, my_len, my_off, x, mem):
+            return _stage_forward(cfg, gp, my_len, my_off, x, positions,
+                                  mem, mem_pos, kv_chunk, ssd_chunk,
+                                  unroll=unroll)
+
+        vstage = jax.vmap(run_stage, in_axes=(0, 0, 0, 0,
+                                              0 if cfg.is_encdec else None))
+
+        state0 = jnp.zeros((n_stages, Bm, S, cfg.d_model), cfg.jdtype)
+
+        def tick(carry, t):
+            state, loss_acc = carry
+            inj = embed_mb(jnp.clip(t, 0, n_micro - 1))
+            state = state.at[0].set(inj)
+            state = jax.lax.with_sharding_constraint(state, state_spec)
+            mem_t = None
+            if cfg.is_encdec:
+                idx = jnp.clip(t - jnp.arange(n_stages), 0, n_micro - 1)
+                mem_t = memory_mb[idx]          # [n_stages, Bm, Se, D]
+            out = vstage(stages_params, lens, offs, state, mem_t)
+            out = jax.lax.with_sharding_constraint(out, state_spec)
+            # loss for the microbatch that just left the last stage
+            mb_out = t - (n_stages - 1)
+            lab = jax.lax.dynamic_index_in_dim(
+                labels_mb, jnp.clip(mb_out, 0, n_micro - 1), 0,
+                keepdims=False)
+            loss_t = cross_entropy_loss(unembed(cfg, pp_params, out[-1]), lab)
+            loss_acc = loss_acc + jnp.where(mb_out >= 0, loss_t, 0.0)
+            # shift stage s -> s+1 (GSPMD: collective-permute over "pod")
+            state = jnp.concatenate(
+                [jnp.zeros_like(out[:1]), out[:-1]], axis=0)
+            return (state, loss_acc), None
+
+        (state, loss_acc), _ = jax.lax.scan(
+            tick, (state0, jnp.float32(0.0)),
+            jnp.arange(n_micro + n_stages - 1), unroll=unroll)
+        return loss_acc / n_micro
+
+    return loss_fn

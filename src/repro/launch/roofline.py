@@ -1,0 +1,103 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e, per assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Terms (seconds, per step, aggregate-over-chips convention):
+  compute    = HLO_FLOPs / (chips x peak)
+  memory     = HLO_bytes / (chips x hbm_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+collective_bytes is parsed from the compiled HLO: the summed payload of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Conventions (documented, consistent across cells):
+all-gather counts its OUTPUT bytes (data landed per chip x chips),
+all-reduce counts 2x input (ring reduce+broadcast), reduce-scatter and
+all-to-all and collective-permute count input bytes.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "collective_bytes_from_hlo",
+           "roofline_terms", "model_flops"]
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> float:
+    """Sum collective payloads over the whole module (see conventions)."""
+    total = 0.0
+    for m in _COLL_RE.finditer(hlo):
+        out_shape, kind = m.group(1), m.group(2)
+        out_b = _shape_bytes(out_shape)
+        # operand bytes: parse the args inside the call parens
+        end = hlo.find("\n", m.end())
+        if end == -1:
+            end = len(hlo)
+        line = hlo[m.start():end]
+        parts = line.split("(", 1)
+        in_b = _shape_bytes(parts[1]) if len(parts) > 1 else 0
+        if kind == "all-gather":
+            total += out_b
+        elif kind == "all-reduce":
+            total += 2 * in_b
+        else:                         # reduce-scatter / all-to-all / permute
+            total += in_b
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) useful model FLOPs per step.
+    For decode shapes D = global_batch tokens; train multiplies by 3
+    (fwd+bwd) via the 6 factor already; serve uses 2·N·D."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def roofline_terms(record: dict) -> dict:
+    chips = record["n_chips"]
+    t_comp = record["flops"] / (chips * PEAK_FLOPS)
+    t_mem = record["bytes_accessed"] / (chips * HBM_BW)
+    t_coll = record["collective_bytes"] / (chips * LINK_BW)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = {k: (v / bound if bound > 0 else 0.0) for k, v in terms.items()}
+    return {**terms,
+            "bottleneck": bottleneck.replace("_s", ""),
+            "step_time_lower_bound_s": bound,
+            "balance": frac}

@@ -1,0 +1,160 @@
+"""Sharding rules: param / batch / cache PartitionSpecs per (arch, shape).
+
+Strategy (single pod, axes ("data", "model")):
+  * FSDP x TP on params: column-parallel projections (wq/wk/wv/w1/w3,
+    in-projections) are P(..., "data", "model"); row-parallel
+    (wo/w2/out-projections) are P(..., "model", "data") — Megatron
+    pairing, so TP activations stay sharded on "model" through each
+    block, and "data" gives ZeRO-3-style weight sharding.
+  * MoE expert stacks [E, din, dout] keep E as a weight-batch dim,
+    sharded jointly: P(None, E->"data"? no — E replicated, din "data",
+    dout "model") for w1; reversed for w2.
+  * Embeddings: vocab-parallel P("model", "data"); lm_head P("data",
+    "model").
+  * Batch: leading batch dim over "data" (and over ("pod", "data") for
+    multi-pod serving).
+  * Decode KV caches: sequence-sharded over "model" (flash-decode; GSPMD
+    turns the softmax reductions into cross-partition collectives),
+    batch over "data"; bounded recurrent states shard heads/width over
+    "model".
+
+Multi-pod (axes ("pod", "data", "model")):
+  * train: pipeline over "pod" (see pipeline.py) — per-stage stacked
+    params get a leading P("pod") axis; everything else as above.
+  * serve: "pod" joins the batch axis (DP across pods), except batch-1
+    long-context where it is left replicated (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["param_specs", "batch_specs", "cache_pspecs", "opt_state_specs",
+           "logical_name"]
+
+_COL = ("wq", "wk", "wv", "w1", "w3", "in_x", "in_g", "in_proj")
+_ROW = ("wo", "w2", "out", "out_proj")
+
+
+def logical_name(path) -> str:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return "/".join(keys)
+
+
+def _leaf_spec(name: str, ndim: int) -> P:
+    last = name.rsplit("/", 1)[-1]
+    trailing: tuple[Any, ...]
+    if last == "embed":
+        trailing = ("model", "data")
+    elif last == "lm_head":
+        trailing = ("data", "model")
+    elif last == "router":
+        trailing = ("data", None)
+    elif last in _COL:
+        trailing = ("data", "model")
+    elif last in _ROW:
+        trailing = ("model", "data")
+    elif last == "conv":
+        trailing = (None, "model")       # [K, W] depthwise: width over model
+    else:
+        # 1-D norms / biases / scalars: replicate
+        trailing = ()
+    lead = ndim - len(trailing)
+    if lead < 0:      # e.g. 1-D leaf caught by a 2-D rule; replicate
+        return P()
+    return P(*((None,) * lead + trailing))
+
+
+def _divisible(spec: P, shape, mesh) -> P:
+    """Drop axes whose dimension is not divisible by the mesh axis size
+    (e.g. vocab 50280 on a 16-way axis -> replicate that dim)."""
+    if mesh is None:
+        return spec
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        out.append(ax if dim % total == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs(params, mesh=None) -> Any:
+    """PartitionSpec pytree mirroring the param pytree (single-pod rules;
+    stacked group axes become leading None => replicated-over-nothing,
+    sharded only on the trailing weight dims)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_divisible(_leaf_spec(logical_name(path), leaf.ndim),
+                        leaf.shape, mesh)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, *,
+                multi_pod: bool = False) -> dict:
+    """Specs for the input batch dict produced by configs.input_specs."""
+    B = shape.global_batch
+    if multi_pod and shape.kind != "train":
+        bdim = ("pod", "data") if B >= 32 else None
+    else:
+        bdim = "data" if B >= 2 else None
+    out: dict[str, P] = {}
+    if shape.kind == "decode":
+        out["tokens"] = P(bdim)
+        out["positions"] = P(bdim)
+        if cfg.is_encdec:
+            out["enc_embeds"] = P(bdim, None, None)
+        return out
+    for key in ("tokens", "labels"):
+        out[key] = P(bdim, None)
+    out["embeds"] = P(bdim, None, None)
+    out["enc_embeds"] = P(bdim, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeSpec, *,
+                 multi_pod: bool = False) -> dict:
+    """Specs for the decode cache (layout of serve.kvcache.cache_specs:
+    leading group axis, then batch)."""
+    B = shape.global_batch
+    if multi_pod:
+        bdim = ("pod", "data") if B >= 32 else None
+        seq = ("pod", "model") if B < 32 else "model"
+    else:
+        bdim = "data" if B >= 2 else None
+        seq = "model"
+    entry: dict[str, Any] = {}
+    for s, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "local", "global"):
+            entry[f"b{s}"] = {
+                "k": P(None, bdim, seq, None, None),
+                "v": P(None, bdim, seq, None, None),
+                "pos": P(None, bdim, seq),
+            }
+        elif kind == "rglru":
+            entry[f"b{s}"] = {
+                "conv": P(None, bdim, None, "model"),
+                "h": P(None, bdim, "model"),
+            }
+        elif kind == "ssd":
+            entry[f"b{s}"] = {
+                "conv": P(None, bdim, None, "model"),
+                "h": P(None, bdim, "model", None, None),
+            }
+    return entry
+
+
+def opt_state_specs(pspecs) -> dict:
+    """AdamW state mirrors param sharding (m, v) + replicated step."""
+    return {"m": pspecs, "v": pspecs, "step": P()}

@@ -1,0 +1,194 @@
+"""Sharded step factories for the dry-run, trainers and servers.
+
+``abstract_*`` builders produce (jitted_fn, arg ShapeDtypeStructs) pairs
+so the dry-run can ``.lower().compile()`` every (arch x shape x mesh)
+cell with zero real allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.configs.registry import input_specs
+from repro.core.partitioner import contiguous_stages
+from repro.launch import pipeline as pp
+from repro.launch.shardings import (batch_specs, cache_pspecs,
+                                    opt_state_specs, param_specs)
+from repro.models.transformer import decode_step, forward, init_lm, prefill
+from repro.serve.kvcache import cache_specs
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+__all__ = ["abstract_params", "abstract_train_step", "abstract_serve_prefill",
+           "abstract_serve_decode", "abstract_pp_train_step", "ns"]
+
+
+def ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+
+
+def _microbatches_for(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Power-of-two microbatch count (divides the global batch) keeping
+    per-microbatch activation footprint bounded."""
+    tokens = shape.seq_len * shape.global_batch
+    need = max(1, tokens * cfg.d_model // (2 ** 31))
+    mb = 1
+    while mb < need and mb < 8 and shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+def abstract_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                        opt_cfg: AdamWConfig | None = None, *,
+                        microbatches: int | None = None, remat: bool = True,
+                        unroll: bool = False, seq_axis: str = "model"):
+    """Single-pod (data, model) train step: FSDP x TP via GSPMD."""
+    if opt_cfg is None:
+        # >100B params: bf16 Adam moments or the optimizer state alone
+        # overflows 16 GB/chip HBM on a single pod (see DESIGN.md).
+        opt_cfg = AdamWConfig(
+            moments_dtype="bfloat16" if cfg.param_count() > 1e11
+            else "float32")
+    params_s = abstract_params(cfg)
+    opt_s = jax.eval_shape(
+        functools.partial(init_train_state, cfg, opt_cfg=opt_cfg), params_s)
+    batch_s = input_specs(cfg, shape)
+    pspec = param_specs(params_s, mesh)
+    ospec = opt_state_specs(pspec)
+    bspec = {k: batch_specs(cfg, shape)[k] for k in batch_s}
+    mb = microbatches if microbatches is not None else _microbatches_for(cfg, shape)
+    # unroll=True only for the small cost-probe variants: lax.scan bodies
+    # are not trip-count-multiplied by XLA's cost analysis (see dryrun.py).
+    # Probe-time chunk sizes are S/8 (>=1024 KV / >=256 SSD) so unrolled
+    # bodies stay bounded; flash-attention FLOPs are chunk-invariant.
+    kvc = max(1024, shape.seq_len // 8)
+    ssdc = min(1024, max(256, shape.seq_len // 8))
+    step = make_train_step(cfg, opt_cfg, microbatches=mb, remat=remat,
+                           unroll=unroll, kv_chunk=kvc, ssd_chunk=ssdc,
+                           seq_axis=seq_axis or None)
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(ns(mesh, pspec), ns(mesh, ospec), ns(mesh, bspec)),
+        out_shardings=(ns(mesh, pspec), ns(mesh, ospec), None),
+        donate_argnums=(0, 1))
+    return jit_fn, (params_s, opt_s, batch_s)
+
+
+def abstract_serve_prefill(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+                           multi_pod: bool = False, unroll: bool = False,
+                           seq_axis: str = "model"):
+    """Prefill step: logits + cache, batch over data (and pod)."""
+    params_s = abstract_params(cfg)
+    batch_s = input_specs(cfg, shape)
+    pspec = param_specs(params_s, mesh)
+    bspec = {k: batch_specs(cfg, shape, multi_pod=multi_pod)[k]
+             for k in batch_s}
+    max_len = shape.seq_len
+
+    kvc = max(1024, shape.seq_len // 8)
+    ssdc = min(1024, max(256, shape.seq_len // 8))
+
+    def fn(params, batch):
+        logits, cache = prefill(params, cfg, batch, max_len=max_len,
+                                kv_chunk=kvc, ssd_chunk=ssdc,
+                                unroll=unroll, seq_axis=seq_axis or None)
+        # emit only the last-position logits (serving returns next token)
+        return logits[:, -1], cache
+
+    cspec = cache_pspecs(cfg, shape, multi_pod=multi_pod)
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(ns(mesh, pspec), ns(mesh, bspec)),
+        out_shardings=(None, ns(mesh, cspec)))
+    return jit_fn, (params_s, batch_s)
+
+
+def abstract_serve_decode(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+                          multi_pod: bool = False, unroll: bool = False):
+    """One-token decode against a seq_len KV cache (flash-decode via
+    GSPMD collectives over the sequence-sharded cache)."""
+    params_s = abstract_params(cfg)
+    batch_s = input_specs(cfg, shape)
+    pspec = param_specs(params_s, mesh)
+    bspec = {k: batch_specs(cfg, shape, multi_pod=multi_pod)[k]
+             for k in batch_s}
+    cspec = cache_pspecs(cfg, shape, multi_pod=multi_pod)
+    cache_s = cache_specs(cfg, shape.global_batch, shape.seq_len)
+
+    def fn(params, cache, batch):
+        enc = batch.get("enc_embeds")
+        logits, new_cache = decode_step(
+            params, cfg, cache, batch["tokens"], batch["positions"],
+            enc_memory=enc, unroll=unroll)
+        return logits, new_cache
+
+    jit_fn = jax.jit(
+        fn,
+        in_shardings=(ns(mesh, pspec), ns(mesh, cspec), ns(mesh, bspec)),
+        out_shardings=(None, ns(mesh, cspec)),
+        donate_argnums=(1,))
+    return jit_fn, (params_s, cache_s, batch_s)
+
+
+def abstract_pp_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec,
+                           opt_cfg: AdamWConfig | None = None, *,
+                           n_micro: int = 4, partition=None,
+                           unroll: bool = False):
+    """Multi-pod pipelined train step.  ``partition`` is an AFarePart
+    layer->tier mapping (defaults to an equal split)."""
+    import numpy as np
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig(
+            moments_dtype="bfloat16" if cfg.param_count() > 1e11
+            else "float32")
+    n_stages = mesh.shape["pod"]
+    params_s = abstract_params(cfg)
+    if partition is None:
+        partition = np.zeros(cfg.n_layers, np.int64)
+    layer_cuts = contiguous_stages(np.asarray(partition), n_stages)
+    cuts_g = pp.group_cuts(layer_cuts, cfg)
+
+    def to_pp(params):
+        stages, _ = pp.stage_stack(params["groups"], cuts_g)
+        out = {k: v for k, v in params.items() if k != "groups"}
+        out["stages"] = stages
+        return out
+
+    pp_params_s = jax.eval_shape(to_pp, params_s)
+    # specs: stages P("pod", None, <rules>); everything else single-pod rules
+    pspec = param_specs({k: v for k, v in pp_params_s.items()
+                         if k != "stages"}, mesh)
+    pspec["stages"] = pp.stage_param_specs(pp_params_s["stages"], mesh)
+    ospec = opt_state_specs(pspec)
+    opt_s = jax.eval_shape(
+        functools.partial(init_train_state, cfg, opt_cfg=opt_cfg),
+        pp_params_s)
+    batch_s = input_specs(cfg, shape)
+    bspec = {k: batch_specs(cfg, shape)[k] for k in batch_s}
+
+    loss_fn = pp.make_pp_loss(cfg, mesh, cuts_g, n_micro, unroll=unroll)
+
+    from repro.train.optimizer import adamw_update
+
+    def step(ppp, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(ppp, batch)
+        ppp, opt_state, m = adamw_update(opt_cfg, ppp, grads, opt_state)
+        return ppp, opt_state, {"loss": loss, **m}
+
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(ns(mesh, pspec), ns(mesh, ospec), ns(mesh, bspec)),
+        out_shardings=(ns(mesh, pspec), ns(mesh, ospec), None),
+        donate_argnums=(0, 1))
+    return jit_fn, (pp_params_s, opt_s, batch_s)

@@ -1,0 +1,60 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs the REDUCED config end-to-end (real
+optimization steps, checkpoints, straggler watch).  On a TPU cluster the
+same entry point selects the full config and the sharded step from
+launch/steps.py — the dry-run proves those lower/compile on the
+production meshes.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (multi-B param) config — needs TPU")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data import TokenStream
+    from repro.train import AdamWConfig, Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    if cfg.frontend in ("vision", "audio") or cfg.is_encdec:
+        raise SystemExit(f"{args.arch}: frontend-stub archs train via "
+                         "examples/train_lm.py-style drivers with embeds; "
+                         "use a text arch here")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"steps={args.steps}")
+    data = TokenStream(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
+                       seed=0)
+    trainer = Trainer(
+        cfg, AdamWConfig(lr=args.lr, warmup_steps=10,
+                         total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=25,
+                      ckpt_dir=args.ckpt_dir,
+                      microbatches=args.microbatches),
+        data)
+    if args.resume and trainer.try_restore():
+        print(f"resumed at step {trainer.step}")
+    hist = trainer.run()
+    losses = [h["loss"] for h in hist]
+    print(f"loss: {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,337 @@
+"""The paper's evaluation CNNs: AlexNet, SqueezeNet, ResNet18.
+
+Faithful layer *structure* (the partitioning granularity the paper uses)
+with a configurable width multiplier so the networks train to high clean
+accuracy on CPU within the offline setting (see DESIGN.md §7 on the
+dataset substitution).
+
+Each model exposes:
+  * ``init(key, num_classes, width)``         -> params (list of unit params)
+  * ``apply(params, x, w_rates, a_rates, seed)`` -> logits, with per-UNIT
+    traced fault rates (unit = partitionable layer, matching the paper's
+    layer->device mapping granularity)
+  * ``layer_infos(num_classes, width, img)``  -> list[LayerInfo] for the
+    cost model.
+
+Faults follow the paper exactly: quantize to 16-bit fixed point, flip
+the 4 LSBs with the per-unit rate (weights and/or activations), run the
+layer with the corrupted values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import dataclasses
+
+from repro.core.costmodel import LayerInfo
+from repro.models.layers import maybe_corrupt
+
+
+def _with_prior(infos):
+    """Analytic sensitivity prior (earlier layers propagate corruption
+    further — the paper injects faults into early conv layers for this
+    reason); replaced by profiled values when a layer sweep is run."""
+    n = len(infos)
+    out = []
+    for i, li in enumerate(infos):
+        x = i / max(n - 1, 1)
+        out.append(dataclasses.replace(
+            li, sensitivity=0.002 * (1.35 - x + 0.25 * x ** 4)))
+    return out
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+def _conv_init(key, kh, kw, cin, cout):
+    scale = np.sqrt(2.0 / (kh * kw * cin))
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32) * scale,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _dense_init(key, din, dout):
+    scale = np.sqrt(2.0 / din)
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32) * scale,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def _gap(x):
+    return x.mean(axis=(1, 2))
+
+
+# Quantization width for the CNN fault path.  The paper's accelerators
+# are INT8-class ("fixed-point integer representations (e.g., INT8)",
+# Sec. III-B); 4 vulnerable LSBs of INT8 reproduce the paper's accuracy
+# dynamics.  (16-bit mode is available for the milder regime.)
+FAULT_BITS = 8
+FAULTY_BITS = 4
+
+
+def _corrupt_unit(p, x, wr, ar, seed):
+    """Apply the paper's fault model to one unit's weights + input acts."""
+    if wr is not None:
+        p = jax.tree.map(
+            lambda w: maybe_corrupt(w, wr, seed, bits=FAULT_BITS,
+                                    faulty_bits=FAULTY_BITS)
+            if w.ndim > 1 else w, p)
+        x = maybe_corrupt(x, ar, seed + 1, bits=FAULT_BITS,
+                          faulty_bits=FAULTY_BITS)
+    return p, x
+
+
+def _rates(w_rates, a_rates, seed, i):
+    if w_rates is None:
+        return None, None, None
+    return w_rates[i], a_rates[i], seed + 7919 * i
+
+
+# ==========================================================================
+# AlexNet (5 conv + 3 fc = 8 partitionable units)
+# ==========================================================================
+class AlexNet:
+    n_units = 8
+
+    @staticmethod
+    def channels(width: float = 1.0):
+        c = lambda v: max(8, int(v * width))
+        return [c(64), c(192), c(384), c(256), c(256)], [c(1024), c(1024)]
+
+    @staticmethod
+    def init(key, num_classes=16, width: float = 1.0, img: int = 32):
+        convs, fcs = AlexNet.channels(width)
+        ks = jax.random.split(key, 8)
+        p = []
+        cin = 3
+        specs = [(3, convs[0], 1), (3, convs[1], 1), (3, convs[2], 1),
+                 (3, convs[3], 1), (3, convs[4], 1)]
+        for i, (k, cout, s) in enumerate(specs):
+            p.append(_conv_init(ks[i], k, k, cin, cout))
+            cin = cout
+        # three maxpools of 2 => spatial img/8
+        feat = (img // 8) ** 2 * convs[4]
+        p.append(_dense_init(ks[5], feat, fcs[0]))
+        p.append(_dense_init(ks[6], fcs[0], fcs[1]))
+        p.append(_dense_init(ks[7], fcs[1], num_classes))
+        return p
+
+    @staticmethod
+    def apply(params, x, w_rates=None, a_rates=None, seed=0):
+        pools_after = {0, 1, 4}
+        for i in range(5):
+            p, xi = _corrupt_unit(params[i], x, *_rates(w_rates, a_rates, seed, i))
+            x = jax.nn.relu(_conv(p, xi))
+            if i in pools_after:
+                x = _maxpool(x)
+        x = x.reshape(x.shape[0], -1)
+        for j in range(3):
+            i = 5 + j
+            p, xi = _corrupt_unit(params[i], x, *_rates(w_rates, a_rates, seed, i))
+            x = xi @ p["w"] + p["b"]
+            if j < 2:
+                x = jax.nn.relu(x)
+        return x
+
+    @staticmethod
+    def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):
+        convs, fcs = AlexNet.channels(width)
+        infos = []
+        cin, hw = 3, img
+        pools_after = {0, 1, 4}
+        for i, cout in enumerate(convs):
+            macs = 9 * cin * cout * hw * hw
+            infos.append(LayerInfo(
+                name=f"conv{i}", kind="conv", macs=macs,
+                weight_bytes=9 * cin * cout * 2,
+                act_in_bytes=hw * hw * cin * 2,
+                act_out_bytes=(hw // (2 if i in pools_after else 1)) ** 2 * cout * 2,
+                params=9 * cin * cout))
+            if i in pools_after:
+                hw //= 2
+            cin = cout
+        feat = hw * hw * convs[4]
+        dims = [(feat, fcs[0]), (fcs[0], fcs[1]), (fcs[1], num_classes)]
+        for j, (a, b) in enumerate(dims):
+            infos.append(LayerInfo(
+                name=f"fc{j}", kind="fc", macs=a * b, weight_bytes=a * b * 2,
+                act_in_bytes=a * 2, act_out_bytes=b * 2, params=a * b))
+        return _with_prior(infos)
+
+
+# ==========================================================================
+# SqueezeNet (conv1 + 8 fire modules + conv10 = 10 units)
+# ==========================================================================
+class SqueezeNet:
+    n_units = 10
+
+    @staticmethod
+    def fire_specs(width: float = 1.0):
+        c = lambda v: max(4, int(v * width))
+        # (squeeze, expand) per fire module (SqueezeNet v1.1 ratios)
+        return [(c(16), c(64)), (c(16), c(64)), (c(32), c(128)),
+                (c(32), c(128)), (c(48), c(192)), (c(48), c(192)),
+                (c(64), c(256)), (c(64), c(256))]
+
+    @staticmethod
+    def init(key, num_classes=16, width: float = 1.0, img: int = 32):
+        specs = SqueezeNet.fire_specs(width)
+        ks = jax.random.split(key, 10)
+        c0 = max(8, int(64 * width))
+        p = [{"conv": _conv_init(ks[0], 3, 3, 3, c0)}]
+        cin = c0
+        for i, (s, e) in enumerate(specs):
+            kk = jax.random.split(ks[1 + i], 3)
+            p.append({"squeeze": _conv_init(kk[0], 1, 1, cin, s),
+                      "e1": _conv_init(kk[1], 1, 1, s, e),
+                      "e3": _conv_init(kk[2], 3, 3, s, e)})
+            cin = 2 * e
+        p.append({"conv": _conv_init(ks[9], 1, 1, cin, num_classes)})
+        return p
+
+    @staticmethod
+    def apply(params, x, w_rates=None, a_rates=None, seed=0):
+        p, xi = _corrupt_unit(params[0], x, *_rates(w_rates, a_rates, seed, 0))
+        x = jax.nn.relu(_conv(p["conv"], xi, stride=1))
+        x = _maxpool(x)
+        pools_after = {1, 3}          # fire indices after which to pool
+        for i in range(8):
+            u = 1 + i
+            p, xi = _corrupt_unit(params[u], x, *_rates(w_rates, a_rates, seed, u))
+            s = jax.nn.relu(_conv(p["squeeze"], xi))
+            e1 = jax.nn.relu(_conv(p["e1"], s))
+            e3 = jax.nn.relu(_conv(p["e3"], s))
+            x = jnp.concatenate([e1, e3], axis=-1)
+            if i in pools_after:
+                x = _maxpool(x)
+        p, xi = _corrupt_unit(params[9], x, *_rates(w_rates, a_rates, seed, 9))
+        x = _conv(p["conv"], xi)
+        return _gap(x)
+
+    @staticmethod
+    def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):
+        specs = SqueezeNet.fire_specs(width)
+        c0 = max(8, int(64 * width))
+        infos = []
+        hw = img
+        infos.append(LayerInfo("conv1", "conv", 9 * 3 * c0 * hw * hw,
+                               9 * 3 * c0 * 2, hw * hw * 3 * 2,
+                               (hw // 2) ** 2 * c0 * 2, 9 * 3 * c0))
+        hw //= 2
+        cin = c0
+        pools_after = {1, 3}
+        for i, (s, e) in enumerate(specs):
+            macs = hw * hw * (cin * s + s * e + 9 * s * e)
+            wparams = cin * s + s * e + 9 * s * e
+            out_hw = hw // (2 if i in pools_after else 1)
+            infos.append(LayerInfo(
+                f"fire{i}", "fire", macs, wparams * 2,
+                hw * hw * cin * 2, out_hw ** 2 * 2 * e * 2, wparams))
+            if i in pools_after:
+                hw //= 2
+            cin = 2 * e
+        infos.append(LayerInfo("conv10", "conv", cin * num_classes * hw * hw,
+                               cin * num_classes * 2, hw * hw * cin * 2,
+                               num_classes * 2, cin * num_classes))
+        return _with_prior(infos)
+
+
+# ==========================================================================
+# ResNet18 (stem + 8 basic blocks + fc = 10 units)
+# ==========================================================================
+class ResNet18:
+    n_units = 10
+
+    @staticmethod
+    def stage_channels(width: float = 1.0):
+        c = lambda v: max(8, int(v * width))
+        return [c(64), c(128), c(256), c(512)]
+
+    @staticmethod
+    def init(key, num_classes=16, width: float = 1.0, img: int = 32):
+        chs = ResNet18.stage_channels(width)
+        ks = jax.random.split(key, 10)
+        p = [{"conv": _conv_init(ks[0], 3, 3, 3, chs[0])}]
+        cin = chs[0]
+        u = 1
+        for stage, cout in enumerate(chs):
+            for blk in range(2):
+                kk = jax.random.split(ks[u], 3)
+                stride = 2 if (stage > 0 and blk == 0) else 1
+                bp = {"c1": _conv_init(kk[0], 3, 3, cin, cout),
+                      "c2": _conv_init(kk[1], 3, 3, cout, cout)}
+                if stride != 1 or cin != cout:
+                    bp["proj"] = _conv_init(kk[2], 1, 1, cin, cout)
+                p.append(bp)
+                cin = cout
+                u += 1
+        p.append(_dense_init(ks[9], chs[3], num_classes))
+        return p
+
+    @staticmethod
+    def apply(params, x, w_rates=None, a_rates=None, seed=0):
+        p, xi = _corrupt_unit(params[0], x, *_rates(w_rates, a_rates, seed, 0))
+        x = jax.nn.relu(_conv(p["conv"], xi))
+        for u in range(1, 9):
+            stage, blk = (u - 1) // 2, (u - 1) % 2
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            fp, xi = _corrupt_unit(params[u], x,
+                                   *_rates(w_rates, a_rates, seed, u))
+            h = jax.nn.relu(_conv(fp["c1"], xi, stride=stride))
+            h = _conv(fp["c2"], h)
+            sc = _conv(fp["proj"], xi, stride=stride) if "proj" in fp else xi
+            x = jax.nn.relu(h + sc)
+        x = _gap(x)
+        p, xi = _corrupt_unit(params[9], x, *_rates(w_rates, a_rates, seed, 9))
+        return xi @ p["w"] + p["b"]
+
+    @staticmethod
+    def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):
+        chs = ResNet18.stage_channels(width)
+        infos = []
+        hw = img
+        infos.append(LayerInfo("stem", "conv", 9 * 3 * chs[0] * hw * hw,
+                               9 * 3 * chs[0] * 2, hw * hw * 3 * 2,
+                               hw * hw * chs[0] * 2, 9 * 3 * chs[0]))
+        cin = chs[0]
+        for stage, cout in enumerate(chs):
+            for blk in range(2):
+                stride = 2 if (stage > 0 and blk == 0) else 1
+                out_hw = hw // stride
+                macs = (9 * cin * cout * out_hw ** 2
+                        + 9 * cout * cout * out_hw ** 2)
+                wp = 9 * cin * cout + 9 * cout * cout
+                if stride != 1 or cin != cout:
+                    macs += cin * cout * out_hw ** 2
+                    wp += cin * cout
+                infos.append(LayerInfo(
+                    f"s{stage}b{blk}", "resblock", macs, wp * 2,
+                    hw * hw * cin * 2, out_hw ** 2 * cout * 2, wp))
+                hw = out_hw
+                cin = cout
+        infos.append(LayerInfo("fc", "fc", chs[3] * num_classes,
+                               chs[3] * num_classes * 2, chs[3] * 2,
+                               num_classes * 2, chs[3] * num_classes))
+        return _with_prior(infos)
+
+
+CNN_MODELS = {"alexnet": AlexNet, "squeezenet": SqueezeNet,
+              "resnet18": ResNet18}

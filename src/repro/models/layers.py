@@ -1,0 +1,629 @@
+"""Building blocks for the assigned architectures.
+
+Everything is purely functional: ``init_*`` returns a param pytree,
+``*_fwd`` applies it.  All blocks accept an optional fault-injection
+pair ``(w_rate, a_rate, seed)`` with *traced* rates so the partitioner
+evaluates any layer->device mapping without recompilation (rates are
+None => fault machinery completely absent from the jaxpr).
+
+Attention is chunked-flash (online softmax over KV blocks) so 32k
+prefill never materialises an S x S score matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.quant.fixedpoint import QuantSpec
+
+Params = dict[str, Any]
+
+# --------------------------------------------------------------------------
+# Fault-op dispatch: "ref" (pure jnp — used inside pjit'd distributed steps)
+# or "pallas" (fused kernel, interpret=True on CPU).
+# --------------------------------------------------------------------------
+FAULT_IMPL = "ref"
+
+# §Perf hillclimb toggle: when True and the chunk loop is unrolled,
+# flash attention statically skips the score tiles that the causal (and
+# sliding-window) masks would zero anyway — q rows < chunk_start never
+# attend to that KV chunk.  Exact math, ~2x fewer score FLOPs for causal
+# training/prefill.  Off by default so the paper-faithful baseline is
+# measured first (see EXPERIMENTS.md §Perf).
+CAUSAL_SKIP = False
+
+# §Perf toggle: compute attention score/PV einsums from bf16 operands with
+# fp32 accumulation (preferred_element_type).  TPU-native (MXU is bf16 in
+# fp32 out) and halves the KV all-gather bytes that XLA otherwise hoists
+# to f32.  Off by default for the paper-faithful fp32 baseline.
+ATTN_BF16_COMPUTE = False
+
+# §Perf toggle (set via launch/dryrun overrides): axis name for full
+# sequence-parallel activations.  When set, block inputs and the large
+# per-layer intermediates (MLP hidden, QKV projections) are constrained
+# S-sharded so GSPMD gathers the (much smaller) weights per layer rather
+# than all-reducing [B,S,d_ff]-sized partial products.  Applied only to
+# sequences >= 1024 (decode steps with S=1 are unaffected).
+BLOCK_SEQ_AXIS = None
+
+
+def _seq_wsc(x, axis_pos: int = 1):
+    if BLOCK_SEQ_AXIS is None or x.ndim <= axis_pos \
+            or x.shape[axis_pos] < 1024:
+        return x
+    from jax.sharding import PartitionSpec as _P
+    spec = [None] * x.ndim
+    spec[axis_pos] = BLOCK_SEQ_AXIS
+    return jax.lax.with_sharding_constraint(x, _P(*spec))
+
+
+def set_fault_impl(impl: str):
+    global FAULT_IMPL
+    assert impl in ("ref", "pallas"), impl
+    FAULT_IMPL = impl
+
+
+def maybe_corrupt(x: jax.Array, rate, seed, bits: int = 16,
+                  faulty_bits: int = 4) -> jax.Array:
+    """Quantize->bitflip->dequantize when rate is not None (traced ok)."""
+    if rate is None:
+        return x
+    if FAULT_IMPL == "pallas":
+        return kops.quant_bitflip(x, seed, rate, faulty_bits, QuantSpec(bits))
+    return kref.quant_bitflip_ref(x, jnp.asarray(seed, jnp.int32),
+                                  jnp.asarray(rate, jnp.float32),
+                                  faulty_bits, QuantSpec(bits))
+
+
+def corrupt_params(params, rate, seed):
+    """Corrupt every float leaf of a block's params (weight-fault domain)."""
+    if rate is None:
+        return params
+    leaves, treedef = jax.tree.flatten(params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(maybe_corrupt(leaf, rate, seed + 977 * i))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Initialisers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_norm(kind: str, d: int, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if kind == "np_layernorm":            # olmo: non-parametric LN
+        return {}
+    raise ValueError(kind)
+
+
+def norm_fwd(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] or [S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; chunked flash; causal / sliding-window; logit softcap)
+# --------------------------------------------------------------------------
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d, dtype),
+    }
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    pos_q: jax.Array, pos_k: jax.Array, *,
+                    window: int | None = None, softcap: float = 0.0,
+                    kv_chunk: int = 1024, causal: bool = True,
+                    unroll: bool = False,
+                    seq_axis: str | None = None) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: [B, Sq, Hq, Dh]; k, v: [B, Skv, Hkv, Dh]; pos_*: [Sq]/[Skv] int32.
+    Never materialises [Sq, Skv]; peak extra memory is [B, Hq, Sq, chunk].
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qs = (q * (Dh ** -0.5)).astype(jnp.float32)
+    qs = qs.reshape(B, Sq, Hkv, g, Dh)
+    if seq_axis is not None:
+        # sequence-parallel attention: queries (and thus the per-chunk
+        # score tile) stay sharded over Sq; KV chunks are small and get
+        # all-gathered by GSPMD.  Bounds the per-device score buffer for
+        # any head count (56 heads don't divide a 16-way axis).
+        from jax.sharding import PartitionSpec as _P
+        qs = jax.lax.with_sharding_constraint(
+            qs, _P(None, seq_axis, None, None, None))
+    kv_chunk = min(kv_chunk, Skv)
+    n_chunks = -(-Skv // kv_chunk)
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, (0, pad), constant_values=-(2 ** 30))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, Dh)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, Dh)
+    pc = pos_k.reshape(n_chunks, kv_chunk)
+
+    if CAUSAL_SKIP and unroll and causal and Sq == Skv:
+        # Static triangular schedule (self-attention with pos = arange):
+        # chunk c only interacts with q rows [c*C, min(Sq, c*C+C+window)).
+        C = kv_chunk
+        m = jnp.full((B, Sq, Hkv, g), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, Sq, Hkv, g), jnp.float32)
+        acc = jnp.zeros((B, Sq, Hkv, g, Dh), jnp.float32)
+        for c in range(n_chunks):
+            lo = c * C
+            hi = Sq if window is None else min(Sq, c * C + C + window)
+            if lo >= hi:
+                continue
+            qs_c = qs[:, lo:hi]
+            pq_c = pos_q[lo:hi]
+            kb, vb, pb = kc[:, c], vc[:, c], pc[c]
+            s = jnp.einsum("bqhgd,bchd->bqhgc", qs_c, kb.astype(jnp.float32))
+            s = _softcap(s, softcap)
+            valid = (pb[None, :] >= 0) & (pb[None, :] <= pq_c[:, None])
+            if window is not None:
+                valid = valid & (pq_c[:, None] - pb[None, :] < window)
+            s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+            m_old = m[:, lo:hi]
+            m_new = jnp.maximum(m_old, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_old - m_new)
+            l = l.at[:, lo:hi].set(l[:, lo:hi] * corr + p.sum(axis=-1))
+            acc = acc.at[:, lo:hi].set(
+                acc[:, lo:hi] * corr[..., None]
+                + jnp.einsum("bqhgc,bchd->bqhgd", p, vb.astype(jnp.float32)))
+            m = m.at[:, lo:hi].set(m_new)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs                       # [B,C,Hkv,Dh], [C]
+        if ATTN_BF16_COMPUTE:
+            s = jnp.einsum("bqhgd,bchd->bqhgc", qs.astype(jnp.bfloat16),
+                           kb.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+        else:
+            s = jnp.einsum("bqhgd,bchd->bqhgc", qs,
+                           kb.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        valid = pb[None, :] >= 0
+        if causal:
+            valid = valid & (pb[None, :] <= pos_q[:, None])
+        if window is not None:
+            valid = valid & (pos_q[:, None] - pb[None, :] < window)
+        s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        if ATTN_BF16_COMPUTE:
+            pv = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(jnp.bfloat16),
+                            vb.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bqhgc,bchd->bqhgd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, g, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc),
+        unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_fwd(p: Params, x: jax.Array, positions: jax.Array, *,
+                  n_heads: int, n_kv: int, head_dim: int, rope_theta: float,
+                  window: int | None = None, softcap: float = 0.0,
+                  kv_chunk: int = 1024, unroll: bool = False,
+                  seq_axis: str | None = None,
+                  memory: jax.Array | None = None,
+                  memory_pos: jax.Array | None = None) -> jax.Array:
+    """Self-attention (causal) or cross-attention (memory given, non-causal)."""
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    src = memory if memory is not None else x
+    Sk = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Sk, n_kv, head_dim)
+    v = (src @ p["wv"]).reshape(B, Sk, n_kv, head_dim)
+    if memory is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+        pos_k = positions
+        causal = True
+    else:
+        pos_k = (memory_pos if memory_pos is not None
+                 else jnp.arange(Sk, dtype=jnp.int32))
+        causal = False
+    o = flash_attention(q, k, v, positions, pos_k, window=window,
+                        softcap=softcap, kv_chunk=kv_chunk, causal=causal,
+                        unroll=unroll, seq_axis=seq_axis)
+    return o.reshape(B, S, n_heads * head_dim) @ p["wo"]
+
+
+def attention_prefill(p: Params, x, positions, *, n_heads, n_kv, head_dim,
+                      rope_theta, window=None, softcap=0.0, kv_chunk=1024,
+                      unroll: bool = False, seq_axis: str | None = None):
+    """Like attention_fwd but also returns (k, v) for cache construction."""
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    o = flash_attention(q, k, v, positions, positions, window=window,
+                        softcap=softcap, kv_chunk=kv_chunk, causal=True,
+                        unroll=unroll, seq_axis=seq_axis)
+    return o.reshape(B, S, n_heads * head_dim) @ p["wo"], k, v
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_pos: jax.Array, pos: jax.Array, *,
+                     window: int | None = None,
+                     softcap: float = 0.0) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention against a cache shard.
+
+    q: [B, Hq, Dh]; k_cache/v_cache: [B, Skv, Hkv, Dh];
+    cache_pos: [B, Skv] absolute positions (-1 = empty slot); pos: [B].
+    Returns per-shard (num [B,Hq,Dh], max [B,Hq], denom [B,Hq]) so the
+    caller can LSE-combine across sequence-sharded cache shards.
+    """
+    B, Hq, Dh = q.shape
+    _, Skv, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    qs = (q * (Dh ** -0.5)).astype(jnp.float32).reshape(B, Hkv, g, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qs, k_cache.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    valid = (cache_pos >= 0) & (cache_pos <= pos[:, None])
+    if window is not None:
+        valid = valid & (pos[:, None] - cache_pos < window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1)                                   # [B,Hkv,g]
+    p_ = jnp.exp(s - m[..., None])
+    den = p_.sum(axis=-1)
+    num = jnp.einsum("bhgs,bshd->bhgd", p_, v_cache.astype(jnp.float32))
+    return (num.reshape(B, Hq, Dh), m.reshape(B, Hq), den.reshape(B, Hq))
+
+
+def lse_combine(num, m, den, axis_name: str | None):
+    """Combine per-shard flash-decode partials across `axis_name`."""
+    if axis_name is None:
+        return num / jnp.maximum(den[..., None], 1e-30)
+    m_g = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_g)
+    num_g = jax.lax.psum(num * w[..., None], axis_name)
+    den_g = jax.lax.psum(den * w, axis_name)
+    return num_g / jnp.maximum(den_g[..., None], 1e-30)
+
+
+# --------------------------------------------------------------------------
+# MLP (gated / plain)
+# --------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, d_ff, dtype),
+         "w2": dense_init(ks[1], d_ff, d, dtype)}
+    if act.endswith("_glu"):
+        p["w3"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def _act(x, act: str):
+    base = act.removesuffix("_glu")
+    if base == "silu":
+        return jax.nn.silu(x)
+    if base == "gelu":
+        return jax.nn.gelu(x)
+    if base == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)
+
+
+def mlp_fwd(p: Params, x: jax.Array, act: str) -> jax.Array:
+    h = _act(x @ p["w1"], act)
+    if act.endswith("_glu"):
+        h = h * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+# --------------------------------------------------------------------------
+# MoE with top-k routing and sort-based dispatch (TPU-friendly: no
+# quadratic one-hot dispatch einsum; tokens are sorted by expert id and
+# processed in equal-capacity slots).
+# --------------------------------------------------------------------------
+def init_moe(key, d: int, n_experts: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    def einit(k, din, dout):
+        sc = 1.0 / np.sqrt(din)
+        return (jax.random.normal(k, (n_experts, din, dout), jnp.float32) * sc
+                ).astype(dtype)
+    p = {"router": dense_init(ks[0], d, n_experts, jnp.float32),
+         "w1": einit(ks[1], d, d_ff), "w2": einit(ks[2], d_ff, d)}
+    if act.endswith("_glu"):
+        p["w3"] = einit(ks[3], d, d_ff)
+    return p
+
+
+def moe_fwd(p: Params, x: jax.Array, *, top_k: int, act: str,
+            capacity_factor: float = 1.25) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].  Dense-einsum dispatch over capacity
+    slots: tokens sorted by expert, gathered into [E, C, D], expert
+    matmuls batched with einsum, scattered back with combine weights."""
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert; cf >= E/top_k (or cf <= 0) means dropless (C = T)
+    if capacity_factor <= 0 or capacity_factor >= E / top_k:
+        C = T
+    else:
+        C = min(T, max(1, int(capacity_factor * top_k * T / E)))
+    # flatten (token, k) pairs -> sort by expert id
+    flat_e = gate_idx.reshape(-1)                              # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each pair within its expert's slot list
+    pos_in_e = jnp.arange(T * top_k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)           # overflow slot
+    # gather tokens into [E*C+1, D] buffer
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xt[st], 0))
+    eb = buf[:E * C].reshape(E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", eb, p["w1"])
+    h = _act(h, act)
+    if act.endswith("_glu"):
+        h = h * jnp.einsum("ecd,edf->ecf", eb, p["w3"])
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w2"])               # [E, C, D]
+    flat_out = jnp.concatenate(
+        [eo.reshape(E * C, D), jnp.zeros((1, D), eo.dtype)], axis=0)
+    contrib = flat_out[slot] * sw[:, None] * keep[:, None]
+    out = jnp.zeros((T, D), contrib.dtype).at[st].add(contrib)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# --------------------------------------------------------------------------
+def init_rglru(key, d: int, lru_width: int, conv_kernel: int, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    w = lru_width
+    return {
+        "in_x": dense_init(ks[0], d, w, dtype),      # recurrent branch
+        "in_g": dense_init(ks[1], d, w, dtype),      # gate branch
+        "conv": (jax.random.normal(ks[2], (conv_kernel, w), jnp.float32)
+                 * (1.0 / np.sqrt(conv_kernel))).astype(dtype),
+        "wa": dense_init(ks[3], w, w, dtype),        # recurrence gate
+        "wx": dense_init(ks[4], w, w, dtype),        # input gate
+        "lam": jnp.asarray(
+            np.log(np.expm1(np.linspace(0.9, 0.999, w)) /
+                   (1 - np.linspace(0.9, 0.999, w))), jnp.float32),
+        "out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None = None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan over time axis 1."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_core(p: Params, u: jax.Array, h0: jax.Array | None = None):
+    """u: [B, S, W] (post-conv recurrent branch).  Returns (y, h_last)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["wx"].astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])      # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = i * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    h = _rglru_scan(a, b, h0)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv. x: [B,S,W], w: [K,W]. Returns (y, new_state)
+    where state is the last K-1 inputs for streaming decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else None
+
+
+def rglru_fwd(p: Params, x: jax.Array,
+              state: dict | None = None) -> tuple[jax.Array, dict]:
+    """Full Griffin recurrent block: in-proj, causal conv, RG-LRU, gated out.
+    state: {"conv": [B,K-1,W], "h": [B,W]} for streaming decode."""
+    u = x @ p["in_x"]
+    g = x @ p["in_g"]
+    conv_state = state["conv"] if state else None
+    h0 = state["h"] if state else None
+    u, new_conv = causal_conv1d(u, p["conv"], conv_state)
+    y, h_last = rglru_core(p, u, h0)
+    out = (y * jax.nn.gelu(g)) @ p["out"]
+    return out, {"conv": new_conv, "h": h_last}
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked scan)
+# --------------------------------------------------------------------------
+def init_ssd(key, d: int, *, expand: int, head_dim: int, state: int,
+             conv_kernel: int, dtype) -> Params:
+    d_in = expand * d
+    nh = d_in // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * state + nh, dtype),
+        "conv": (jax.random.normal(ks[1], (conv_kernel, d_in + 2 * state),
+                                   jnp.float32) * 0.5).astype(dtype),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, nh)), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+    }
+
+
+def _ssd_chunk_scan(x, dt, A, Bm, Cm, chunk: int, h0=None,
+                    unroll: bool = False):
+    """Chunked SSD.  x: [B,S,H,P]; dt: [B,S,H]; A: [H] (positive decay
+    rates, used as -A); Bm, Cm: [B,S,N].  Returns (y, h_last[B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    A = A.astype(jnp.float32)
+
+    def body(h, xs):
+        xb, dtb, bb, cb = xs                      # [B,l,H,P],[B,l,H],[B,l,N]
+        dA = dtb * (-A)[None, None, :]            # [B,l,H] (negative)
+        cum = jnp.cumsum(dA, axis=1)              # [B,l,H]
+        # incoming-state contribution: y_state[i] = exp(cum_i) * C_i . h
+        decay_in = jnp.exp(cum)                                  # [B,l,H]
+        y_state = jnp.einsum("bln,bhpn->blhp", cb, h) * decay_in[..., None]
+        # intra-chunk: scores[i,j] = (C_i.B_j) exp(cum_i-cum_j) dt_j, j<=i
+        rel = cum[:, :, None, :] - cum[:, None, :, :]            # [B,l,l,H]
+        li = jnp.arange(xb.shape[1])
+        causal = (li[:, None] >= li[None, :])[None, :, :, None]
+        # clamp before exp: the j>i entries are masked but exp overflow
+        # there would leak NaN through the where in the backward pass
+        w = jnp.where(causal, jnp.exp(jnp.minimum(rel, 0.0)), 0.0) \
+            * dtb[:, None, :, :]
+        cb_dot = jnp.einsum("bln,bmn->blm", cb, bb)              # [B,l,l]
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", cb_dot, w, xb)
+        # state update: h' = exp(cum_L) h + sum_i exp(cum_L-cum_i) dt_i B_i x_i
+        dec_last = jnp.exp(cum[:, -1:, :] - cum)                 # [B,l,H]
+        contrib = jnp.einsum("bln,blh,blhp->bhpn", bb,
+                             dec_last * dtb, xb)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+        return h, y_state + y_intra
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+    h_last, yc = jax.lax.scan(body, h0, (
+        jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)), unroll=unroll)
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y, h_last
+
+
+def ssd_fwd(p: Params, x: jax.Array, *, expand: int, head_dim: int,
+            state: int, chunk: int = 128, unroll: bool = False,
+            cache: dict | None = None) -> tuple[jax.Array, dict]:
+    """Mamba2 block.  x: [B,S,D].  cache: {"conv": [B,K-1,C], "h": [B,H,P,N]}."""
+    B, S, D = x.shape
+    d_in = expand * D
+    nh = d_in // head_dim
+    proj = x @ p["in_proj"]                     # [B,S,2*d_in+2N+nh]
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * state], axis=-1)
+    # conv over (x, B, C) jointly as in mamba2
+    conv_state = cache["conv"] if cache else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])          # [B,S,H]
+    xh = xs.reshape(B, S, nh, head_dim)
+    A = jnp.exp(p["A_log"])                                       # [H] > 0
+    h0 = cache["h"] if cache else None
+    y, h_last = _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk, h0, unroll=unroll)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2 norm before out proj)
+    y = norm_fwd({"w": p["norm_w"]}, y * jax.nn.silu(z), "rmsnorm")
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "h": h_last}

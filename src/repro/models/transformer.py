@@ -1,0 +1,627 @@
+"""Unified LM assembly for all ten assigned architectures.
+
+One codepath builds dense GQA decoders, gemma2-style local/global
+alternation with logit softcaps, SWA (mixtral), MoE (mixtral/arctic),
+Griffin hybrids (recurrentgemma), Mamba2 SSD stacks, and the seamless
+encoder-decoder — driven entirely by ``ArchConfig.block_pattern`` and
+flags.  Layers are stacked into *groups* (one repetition of the block
+pattern) and iterated with ``jax.lax.scan`` so the HLO stays small for
+62-layer models and params shard cleanly (leading group axis).
+
+Fault injection (the paper's technique) enters through ``fault``: a
+``(w_rates, a_rates, seed)`` triple with per-layer traced rates.  With
+``fault=None`` the jaxpr contains zero fault ops — the clean train/serve
+paths pay nothing.
+
+Caches:
+  attn global      k/v [B, S_max, Hkv, Dh] + pos [B, S_max]
+  local / swa      ring buffer of `window` slots (bounded memory)
+  rglru            conv state [B, K-1, W] + hidden [B, W]
+  ssd              conv state [B, K-1, C] + state [B, H, P, N]
+Decode attention returns flash-decode partials; when the cache is
+sequence-sharded over a mesh axis the partials are LSE-combined with
+collectives (``layers.lse_combine``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+# §Perf toggle: keep logits vocab-sharded over "model" through unembed
+# (logsumexp/gather then use small collectives) instead of letting GSPMD
+# all-reduce the full [B,S,V] activation.  None = off (baseline).
+LOGITS_SPEC = None
+
+# (the block-level sequence-parallel toggle lives in layers.BLOCK_SEQ_AXIS)
+
+
+# ==========================================================================
+# Parameter construction
+# ==========================================================================
+def _init_block(cfg: ArchConfig, kind: str, key, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": L.init_norm(cfg.norm_kind, d, dtype)}
+    if kind in ("attn", "local", "global"):
+        p["attn"] = L.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim_, dtype)
+        p["ln2"] = L.init_norm(cfg.norm_kind, d, dtype)
+        if cfg.is_moe:
+            eff = cfg.expert_d_ff or cfg.d_ff
+            p["moe"] = L.init_moe(ks[1], d, cfg.n_experts, eff, cfg.act_fn,
+                                  dtype)
+            if cfg.moe_dense_residual:
+                p["dense_mlp"] = L.init_mlp(ks[2], d, cfg.dense_d_ff or cfg.d_ff,
+                                            cfg.act_fn, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act_fn, dtype)
+    elif kind == "rglru":
+        p["rec"] = L.init_rglru(ks[0], d, cfg.lru_width or d,
+                                cfg.conv_kernel, dtype)
+        p["ln2"] = L.init_norm(cfg.norm_kind, d, dtype)
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act_fn, dtype)
+    elif kind == "ssd":
+        p["ssd"] = L.init_ssd(ks[0], d, expand=cfg.ssm_expand,
+                              head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                              conv_kernel=cfg.conv_kernel, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_group(cfg: ArchConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{s}": _init_block(cfg, kind, ks[s], dtype)
+            for s, kind in enumerate(cfg.block_pattern)}
+
+
+def _init_cross_block(cfg: ArchConfig, key, dtype) -> Params:
+    """Decoder block of the enc-dec variant: self-attn + cross-attn + mlp."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.init_norm(cfg.norm_kind, d, dtype),
+        "attn": L.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim_, dtype),
+        "ln_x": L.init_norm(cfg.norm_kind, d, dtype),
+        "xattn": L.init_attention(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim_, dtype),
+        "ln2": L.init_norm(cfg.norm_kind, d, dtype),
+        "mlp": L.init_mlp(ks[2], d, cfg.d_ff, cfg.act_fn, dtype),
+    }
+
+
+def init_lm(cfg: ArchConfig, key) -> Params:
+    dtype = cfg.jdtype
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    params["embed"] = (jax.random.normal(
+        keys[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype)
+    gkeys = jax.random.split(keys[1], cfg.n_groups)
+    params["groups"] = jax.vmap(
+        lambda k: _init_group(cfg, k, dtype))(gkeys)
+    params["final_norm"] = L.init_norm(cfg.norm_kind, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.is_encdec:
+        ekeys = jax.random.split(keys[3], cfg.n_enc_layers)
+        params["enc_groups"] = jax.vmap(
+            lambda k: _init_block(cfg, "attn", k, dtype))(ekeys)
+        params["enc_norm"] = L.init_norm(cfg.norm_kind, cfg.d_model, dtype)
+        xkeys = jax.random.split(keys[4], cfg.n_layers)
+        params["groups"] = jax.vmap(
+            lambda k: _init_cross_block(cfg, k, dtype))(xkeys)
+    return params
+
+
+# ==========================================================================
+# Fault helpers
+# ==========================================================================
+def _rate_for(fault, lidx):
+    """fault = (w_rates[Lf], a_rates[Lf], seed); lidx may be traced."""
+    if fault is None:
+        return None, None, None
+    w_rates, a_rates, seed = fault
+    wr = jax.lax.dynamic_index_in_dim(w_rates, lidx, keepdims=False)
+    ar = jax.lax.dynamic_index_in_dim(a_rates, lidx, keepdims=False)
+    return wr, ar, seed + lidx * 7919
+
+
+# ==========================================================================
+# Block forward (full-sequence; used by train and prefill)
+# ==========================================================================
+def _block_fwd(cfg: ArchConfig, kind: str, p: Params, x, positions, *,
+               fault_rates=None, build_cache: bool = False,
+               kv_chunk: int = 1024, ssd_chunk: int = 256,
+               unroll: bool = False, seq_axis: str | None = None):
+    """Returns (x_out, cache_entry_or_None)."""
+    x = L._seq_wsc(x)
+    wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
+    if wr is not None:
+        p = L.corrupt_params(p, wr, seed)
+        x = L.maybe_corrupt(x, ar, seed + 1)
+    cache = None
+    window = None
+    softcap = cfg.logit_softcap or 0.0
+    if kind == "local" or (kind == "attn" and cfg.attn_kind == "swa"):
+        window = cfg.window
+    if kind in ("attn", "local", "global"):
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+        if build_cache:
+            a, k, v = L.attention_prefill(
+                p["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, window=window, softcap=softcap,
+                kv_chunk=kv_chunk, unroll=unroll, seq_axis=seq_axis)
+            cache = {"k": k, "v": v}
+        else:
+            a = L.attention_fwd(
+                p["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, window=window, softcap=softcap,
+                kv_chunk=kv_chunk, unroll=unroll, seq_axis=seq_axis)
+        x = x + a
+        h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+        if cfg.is_moe:
+            f = L.moe_fwd(p["moe"], h, top_k=cfg.top_k, act=cfg.act_fn,
+                          capacity_factor=cfg.moe_capacity_factor)
+            if cfg.moe_dense_residual:
+                f = f + L.mlp_fwd(p["dense_mlp"], h, cfg.act_fn)
+        else:
+            f = L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+        x = x + f
+    elif kind == "rglru":
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+        r, st = L.rglru_fwd(p["rec"], h)
+        x = x + r
+        h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+        x = x + L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+        if build_cache:
+            cache = st
+    elif kind == "ssd":
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+        s, st = L.ssd_fwd(p["ssd"], h, expand=cfg.ssm_expand,
+                          head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                          chunk=ssd_chunk, unroll=unroll)
+        x = x + s
+        if build_cache:
+            cache = st
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+# ==========================================================================
+# Full-sequence forward (training / evaluation / prefill without cache)
+# ==========================================================================
+def embed_tokens(cfg: ArchConfig, params: Params, tokens: jax.Array):
+    e = params["embed"][tokens]
+    return e * jnp.asarray(np.sqrt(cfg.d_model), e.dtype)
+
+
+def unembed(cfg: ArchConfig, params: Params, x: jax.Array):
+    x = L.norm_fwd(params["final_norm"], x, cfg.norm_kind)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    if LOGITS_SPEC is not None:
+        logits = jax.lax.with_sharding_constraint(logits, LOGITS_SPEC)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def _encode(cfg: ArchConfig, params: Params, enc_embeds, fault=None,
+            unroll: bool = False):
+    """Encoder stack (seamless): bidirectional self-attention."""
+    S = enc_embeds.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, xs):
+        x, g = carry
+        gp = xs
+        fr = _rate_for(fault, g) if fault is not None else None
+        # bidirectional: implemented as causal=False via memory=self
+        wr, ar, seed = fr if fr is not None else (None,) * 3
+        if wr is not None:
+            gp = L.corrupt_params(gp, wr, seed)
+            x = L.maybe_corrupt(x, ar, seed + 1)
+        h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
+        a = L.attention_fwd(gp["attn"], h, positions, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                            rope_theta=cfg.rope_theta, memory=h,
+                            memory_pos=positions)
+        x = x + a
+        h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
+        x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+        return (x, g + 1), None
+
+    (x, _), _ = jax.lax.scan(body, (enc_embeds, 0), params["enc_groups"],
+                             unroll=unroll)
+    return L.norm_fwd(params["enc_norm"], x, cfg.norm_kind)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: dict, *, fault=None,
+            kv_chunk: int = 1024, ssd_chunk: int = 256, remat: bool = False,
+            unroll: bool = False, seq_axis: str | None = None) -> jax.Array:
+    """Full-sequence logits.
+
+    batch: {"tokens": [B,S]} or {"embeds": [B,S,D]} (stub frontends), plus
+    {"enc_embeds": [B,Se,D]} for enc-dec.
+    fault: optional (w_rates, a_rates, seed); rates indexed by layer
+    (enc layers first for enc-dec).
+    """
+    if "tokens" in batch:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    else:
+        x = batch["embeds"].astype(cfg.jdtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.is_encdec:
+        enc_fault = fault
+        memory = _encode(cfg, params, batch["enc_embeds"], enc_fault,
+                         unroll=unroll)
+        mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+
+        def dec_body(carry, gp):
+            x, g = carry
+            lidx = cfg.n_enc_layers + g
+            wr, ar, seed = _rate_for(fault, lidx)
+            if wr is not None:
+                gp = L.corrupt_params(gp, wr, seed)
+                x = L.maybe_corrupt(x, ar, seed + 1)
+            h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
+            x = x + L.attention_fwd(
+                gp["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, kv_chunk=kv_chunk)
+            h = L.norm_fwd(gp["ln_x"], x, cfg.norm_kind)
+            x = x + L.attention_fwd(
+                gp["xattn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, memory=memory, memory_pos=mem_pos)
+            h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
+            x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+            return (x, g + 1), None
+
+        if remat:
+            dec_body = jax.checkpoint(dec_body)
+        (x, _), _ = jax.lax.scan(dec_body, (x, 0), params["groups"],
+                                 unroll=unroll)
+        return unembed(cfg, params, x)
+
+    P = len(cfg.block_pattern)
+
+    def body(carry, gp):
+        x, g = carry
+        for s, kind in enumerate(cfg.block_pattern):
+            lidx = g * P + s
+            valid = lidx < cfg.n_layers
+            fr = _rate_for(fault, jnp.minimum(lidx, cfg.n_layers - 1)) \
+                if fault is not None else None
+            x_new, _ = _block_fwd(cfg, kind, gp[f"b{s}"], x, positions,
+                                  fault_rates=fr, kv_chunk=kv_chunk,
+                                  ssd_chunk=ssd_chunk, unroll=unroll,
+                                  seq_axis=seq_axis)
+            if cfg.n_layers % P != 0:
+                x = jnp.where(valid, x_new, x)
+            else:
+                x = x_new
+        return (x, g + 1), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (x, 0), params["groups"], unroll=unroll)
+    return unembed(cfg, params, x)
+
+
+# ==========================================================================
+# KV cache: allocation, prefill, decode
+# ==========================================================================
+def _cache_len(cfg: ArchConfig, kind: str, max_len: int) -> int:
+    if kind == "local" or (kind == "attn" and cfg.attn_kind == "swa"):
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Zeroed cache pytree; pos arrays start at -1 (empty)."""
+    dtype = cfg.jdtype
+    groups = []
+    for g in range(cfg.n_groups):
+        entry = {}
+        for s, kind in enumerate(cfg.block_pattern):
+            if kind in ("attn", "local", "global"):
+                Sc = _cache_len(cfg, kind, max_len)
+                entry[f"b{s}"] = {
+                    "k": jnp.zeros((batch, Sc, cfg.n_kv_heads, cfg.head_dim_),
+                                   dtype),
+                    "v": jnp.zeros((batch, Sc, cfg.n_kv_heads, cfg.head_dim_),
+                                   dtype),
+                    "pos": jnp.full((batch, Sc), -1, jnp.int32),
+                }
+            elif kind == "rglru":
+                W = cfg.lru_width or cfg.d_model
+                entry[f"b{s}"] = {
+                    "conv": jnp.zeros((batch, cfg.conv_kernel - 1, W), dtype),
+                    "h": jnp.zeros((batch, W), jnp.float32),
+                }
+            elif kind == "ssd":
+                d_in = cfg.ssm_expand * cfg.d_model
+                nh = d_in // cfg.ssm_head_dim
+                entry[f"b{s}"] = {
+                    "conv": jnp.zeros(
+                        (batch, cfg.conv_kernel - 1, d_in + 2 * cfg.ssm_state),
+                        dtype),
+                    "h": jnp.zeros((batch, nh, cfg.ssm_head_dim,
+                                    cfg.ssm_state), jnp.float32),
+                }
+        groups.append(entry)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *groups) \
+        if len(groups) > 1 else jax.tree.map(lambda x: x[None], groups[0])
+
+
+def _ring_pack(k, v, positions, cache_len: int):
+    """Pack prefill K/V ([B,S,H,Dh]) into a ring/linear cache of
+    ``cache_len`` slots at slot = pos % cache_len (keeps the trailing
+    window for local attention; identity layout when cache_len >= S)."""
+    B, S = k.shape[0], k.shape[1]
+    Sc = cache_len
+    keep = min(S, Sc)
+    ksrc, vsrc = k[:, S - keep:], v[:, S - keep:]
+    psrc = positions[S - keep:]
+    slots = psrc % Sc
+    kc = jnp.zeros((B, Sc) + k.shape[2:], k.dtype).at[:, slots].set(ksrc)
+    vc = jnp.zeros((B, Sc) + v.shape[2:], v.dtype).at[:, slots].set(vsrc)
+    pc = jnp.full((Sc,), -1, jnp.int32).at[slots].set(psrc)
+    return {"k": kc, "v": vc, "pos": jnp.broadcast_to(pc, (B, Sc))}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: dict, max_len: int,
+            *, kv_chunk: int = 1024, ssd_chunk: int = 256, fault=None,
+            unroll: bool = False,
+            seq_axis: str | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence prefill returning (logits [B,S,V], cache).
+
+    ``max_len`` is the allocated cache capacity for global-attention
+    layers (>= S + tokens to generate); local/SWA layers allocate their
+    window only.
+    """
+    if "tokens" in batch:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    else:
+        x = batch["embeds"].astype(cfg.jdtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    P = len(cfg.block_pattern)
+
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, batch["enc_embeds"], fault,
+                         unroll=unroll)
+        mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+
+        def dec_body(carry, gp):
+            x, g = carry
+            h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
+            a, k, v = L.attention_prefill(
+                gp["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, kv_chunk=kv_chunk, unroll=unroll)
+            x = x + a
+            h = L.norm_fwd(gp["ln_x"], x, cfg.norm_kind)
+            x = x + L.attention_fwd(
+                gp["xattn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                rope_theta=cfg.rope_theta, memory=memory, memory_pos=mem_pos)
+            h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
+            x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+            return (x, g + 1), {"b0": _ring_pack(k, v, positions, max_len)}
+
+        (x, _), cache = jax.lax.scan(dec_body, (x, 0), params["groups"],
+                                     unroll=unroll)
+        return unembed(cfg, params, x), cache
+
+    def body(carry, gp):
+        x, g = carry
+        entry = {}
+        for s, kind in enumerate(cfg.block_pattern):
+            lidx = g * P + s
+            fr = _rate_for(fault, jnp.minimum(lidx, cfg.n_layers - 1)) \
+                if fault is not None else None
+            x_new, c = _block_fwd(cfg, kind, gp[f"b{s}"], x, positions,
+                                  fault_rates=fr, build_cache=True,
+                                  kv_chunk=kv_chunk, ssd_chunk=ssd_chunk,
+                                  unroll=unroll, seq_axis=seq_axis)
+            if kind in ("attn", "local", "global"):
+                c = _ring_pack(c["k"], c["v"], positions,
+                               _cache_len(cfg, kind, max_len))
+            if cfg.n_layers % P != 0:
+                valid = lidx < cfg.n_layers
+                x_new = jnp.where(valid, x_new, x)
+            x = x_new
+            entry[f"b{s}"] = c
+        return (x, g + 1), entry
+
+    (x, _), cache = jax.lax.scan(body, (x, 0), params["groups"],
+                                 unroll=unroll)
+    return unembed(cfg, params, x), cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: dict,
+                tokens: jax.Array, pos: jax.Array, *,
+                enc_memory: jax.Array | None = None,
+                seq_axis: str | None = None,
+                seq_shard_index=0, seq_shards: int = 1,
+                fault=None, unroll: bool = False) -> tuple[jax.Array, dict]:
+    """One decode step.  tokens: [B] int32; pos: [B] absolute positions.
+
+    When the KV cache sequence dim is sharded over mesh axis `seq_axis`
+    (flash-decode), each shard owns slots [i*Sc_loc, (i+1)*Sc_loc) of the
+    ring/linear cache; partials are LSE-combined across the axis.
+    """
+    B = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens[:, None])      # [B,1,D]
+    P = len(cfg.block_pattern)
+
+    if cfg.is_encdec:
+        return _decode_step_encdec(params, cfg, cache, x, pos, enc_memory,
+                                   seq_axis, seq_shard_index, seq_shards,
+                                   unroll=unroll)
+
+    def body(carry, xs):
+        x, g = carry
+        gp, gc = xs
+        new_gc = {}
+        for s, kind in enumerate(cfg.block_pattern):
+            lidx = g * P + s
+            fr = _rate_for(fault, jnp.minimum(lidx, cfg.n_layers - 1)) \
+                if fault is not None else None
+            x_new, c_new = _decode_block(
+                cfg, kind, gp[f"b{s}"], gc[f"b{s}"], x, pos,
+                seq_axis, seq_shard_index, seq_shards, fr)
+            if cfg.n_layers % P != 0:
+                valid = lidx < cfg.n_layers
+                x_new = jnp.where(valid, x_new, x)
+                c_new = jax.tree.map(
+                    lambda n, o: jnp.where(valid, n, o), c_new, gc[f"b{s}"])
+            x = x_new
+            new_gc[f"b{s}"] = c_new
+        return (x, g + 1), new_gc
+
+    (x, _), new_cache = jax.lax.scan(body, (x, 0),
+                                     (params["groups"], cache),
+                                     unroll=unroll)
+    logits = unembed(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+def _decode_block(cfg, kind, p, c, x, pos, seq_axis, shard_idx, n_shards,
+                  fault_rates=None):
+    wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
+    if wr is not None:
+        p = L.corrupt_params(p, wr, seed)
+        x = L.maybe_corrupt(x, ar, seed + 1)
+    window = None
+    softcap = cfg.logit_softcap or 0.0
+    if kind == "local" or (kind == "attn" and cfg.attn_kind == "swa"):
+        window = cfg.window
+    if kind in ("attn", "local", "global"):
+        B = x.shape[0]
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)          # [B,1,D]
+        q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim_)
+        k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim_)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)[:, 0]    # [B,Hq,Dh]
+        k = L.rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+        v = v[:, 0]
+        # ring-buffer slot of this token in the *global* cache, then map to
+        # the local shard: slot_global = pos % Sc_total
+        Sc_loc = c["k"].shape[1]
+        Sc_total = Sc_loc * n_shards
+        slot_g = pos % Sc_total
+        owner = slot_g // Sc_loc
+        slot_l = slot_g % Sc_loc
+        mine = (owner == shard_idx)
+        bidx = jnp.arange(B)
+        k_upd = c["k"].at[bidx, slot_l].set(
+            jnp.where(mine[:, None, None], k.astype(c["k"].dtype),
+                      c["k"][bidx, slot_l]))
+        v_upd = c["v"].at[bidx, slot_l].set(
+            jnp.where(mine[:, None, None], v.astype(c["v"].dtype),
+                      c["v"][bidx, slot_l]))
+        pos_upd = c["pos"].at[bidx, slot_l].set(
+            jnp.where(mine, pos, c["pos"][bidx, slot_l]))
+        num, m, den = L.decode_attention(q, k_upd, v_upd, pos_upd, pos,
+                                         window=window, softcap=softcap)
+        o = L.lse_combine(num, m, den, seq_axis)             # [B,Hq,Dh]
+        a = o.reshape(B, 1, cfg.n_heads * cfg.head_dim_).astype(x.dtype) \
+            @ p["attn"]["wo"]
+        x = x + a
+        h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+        if cfg.is_moe:
+            # decode batches are small: dropless routing (cf=0 -> C=T)
+            f = L.moe_fwd(p["moe"], h, top_k=cfg.top_k, act=cfg.act_fn,
+                          capacity_factor=0.0)
+            if cfg.moe_dense_residual:
+                f = f + L.mlp_fwd(p["dense_mlp"], h, cfg.act_fn)
+        else:
+            f = L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+        return x + f, {"k": k_upd, "v": v_upd, "pos": pos_upd}
+    if kind == "rglru":
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+        r, st = L.rglru_fwd(p["rec"], h, state=c)
+        x = x + r
+        h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+        x = x + L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+        return x, st
+    if kind == "ssd":
+        h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+        s, st = L.ssd_fwd(p["ssd"], h, expand=cfg.ssm_expand,
+                          head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                          cache=c)
+        return x + s, st
+    raise ValueError(kind)
+
+
+def _decode_step_encdec(params, cfg, cache, x, pos, enc_memory,
+                        seq_axis, shard_idx, n_shards, unroll: bool = False):
+    mem_pos = jnp.arange(enc_memory.shape[1], dtype=jnp.int32)
+
+    def body(carry, xs):
+        x, g = carry
+        gp, gc = xs
+        B = x.shape[0]
+        h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
+        q = (h @ gp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim_)
+        k = (h @ gp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim_)
+        v = (h @ gp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim_)
+        q = L.rope(q, pos[:, None], cfg.rope_theta)[:, 0]
+        k = L.rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+        v = v[:, 0]
+        c = gc["b0"]
+        Sc_loc = c["k"].shape[1]
+        Sc_total = Sc_loc * n_shards
+        slot_g = pos % Sc_total
+        owner = slot_g // Sc_loc
+        slot_l = slot_g % Sc_loc
+        mine = (owner == shard_idx)
+        bidx = jnp.arange(B)
+        k_upd = c["k"].at[bidx, slot_l].set(
+            jnp.where(mine[:, None, None], k.astype(c["k"].dtype),
+                      c["k"][bidx, slot_l]))
+        v_upd = c["v"].at[bidx, slot_l].set(
+            jnp.where(mine[:, None, None], v.astype(c["v"].dtype),
+                      c["v"][bidx, slot_l]))
+        pos_upd = c["pos"].at[bidx, slot_l].set(
+            jnp.where(mine, pos, c["pos"][bidx, slot_l]))
+        num, m, den = L.decode_attention(q, k_upd, v_upd, pos_upd, pos)
+        o = L.lse_combine(num, m, den, seq_axis)
+        x = x + (o.reshape(B, 1, -1).astype(x.dtype) @ gp["attn"]["wo"])
+        # cross attention to encoder memory (replicated; not cached per-step)
+        h = L.norm_fwd(gp["ln_x"], x, cfg.norm_kind)
+        a = L.attention_fwd(gp["xattn"], h, jnp.zeros((1,), jnp.int32),
+                            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                            memory=enc_memory, memory_pos=mem_pos)
+        x = x + a
+        h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
+        x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+        return (x, g + 1), {"b0": {"k": k_upd, "v": v_upd, "pos": pos_upd}}
+
+    (x, _), new_cache = jax.lax.scan(body, (x, 0),
+                                     (params["groups"], cache),
+                                     unroll=unroll)
+    return unembed(cfg, params, x)[:, 0], new_cache
+
+
+def encode(cfg: ArchConfig, params: Params, enc_embeds, fault=None):
+    return _encode(cfg, params, enc_embeds, fault)

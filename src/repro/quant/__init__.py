@@ -1,0 +1,19 @@
+from repro.quant.fixedpoint import (
+    QuantSpec,
+    compute_scale,
+    dequantize,
+    dequantize_tree,
+    fake_quant,
+    quantize,
+    quantize_tree,
+)
+
+__all__ = [
+    "QuantSpec",
+    "compute_scale",
+    "dequantize",
+    "dequantize_tree",
+    "fake_quant",
+    "quantize",
+    "quantize_tree",
+]

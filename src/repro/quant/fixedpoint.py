@@ -1,0 +1,113 @@
+"""Symmetric fixed-point quantization (the paper's INT8/INT16 2's-complement model).
+
+The paper assumes weights/activations are N_q-bit signed fixed-point in
+2's complement (Sec. IV).  We implement symmetric per-tensor and
+per-channel quantization:
+
+    q = clip(round(x / scale), -2^(N_q-1), 2^(N_q-1) - 1)
+    x' = q * scale
+
+Scales are chosen so that max|x| maps to the top of the integer range.
+INT16 tensors are stored as int32 on CPU/TPU (int16 arithmetic is
+emulated); the *value range* is what matters for the fault model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "compute_scale",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "quantize_tree",
+    "dequantize_tree",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Fixed-point format description.
+
+    Attributes:
+      bits: total signed bit-width N_q (paper uses 16; INT8 also supported).
+      per_channel_axis: axis for per-channel scales, or None for per-tensor.
+    """
+
+    bits: int = 16
+    per_channel_axis: int | None = None
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def storage_dtype(self):
+        # int16 ops lower poorly on some backends; int32 storage keeps the
+        # same value range semantics while staying portable.  INT8 uses
+        # native int8.
+        return jnp.int8 if self.bits <= 8 else jnp.int32
+
+
+def compute_scale(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Symmetric scale so that max|x| -> qmax.  Never zero."""
+    if spec.per_channel_axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != spec.per_channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    amax = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
+    return (amax / spec.qmax).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def quantize(x: jax.Array, spec: QuantSpec = QuantSpec()) -> tuple[jax.Array, jax.Array]:
+    """Returns (q, scale) with q integer-typed."""
+    scale = compute_scale(x, spec)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), spec.qmin, spec.qmax)
+    return q.astype(spec.storage_dtype), scale
+
+
+@partial(jax.jit, static_argnames=("spec", "dtype"))
+def dequantize(q: jax.Array, scale: jax.Array, spec: QuantSpec = QuantSpec(),
+               dtype=jnp.float32) -> jax.Array:
+    del spec  # value range already encoded in q
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def fake_quant(x: jax.Array, spec: QuantSpec = QuantSpec()) -> jax.Array:
+    """Quantize-dequantize round trip (a.k.a. fake quantization)."""
+    q, scale = quantize(x, spec)
+    return dequantize(q, scale, spec, dtype=x.dtype)
+
+
+def quantize_tree(tree, spec: QuantSpec = QuantSpec()):
+    """Quantize every float leaf of a pytree; returns (q_tree, scale_tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    qs, scales = [], []
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            q, s = quantize(leaf, spec)
+        else:
+            q, s = leaf, jnp.float32(1.0)
+        qs.append(q)
+        scales.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def dequantize_tree(q_tree, scale_tree, spec: QuantSpec = QuantSpec(), dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: dequantize(q, s, spec, dtype)
+        if jnp.issubdtype(q.dtype, jnp.integer) else q,
+        q_tree, scale_tree,
+    )

@@ -1,0 +1,4 @@
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.kvcache import cache_bytes, cache_specs
+
+__all__ = ["Engine", "Request", "ServeConfig", "cache_bytes", "cache_specs"]

@@ -1,0 +1,111 @@
+"""Batched serving engine with the AFarePart online phase wired in.
+
+The engine runs continuous batched decode (prefill on admit, step-wise
+decode across the live batch) and exposes the paper's runtime loop:
+periodic canary evaluation measures the accuracy drop of the deployed
+partition under the *current* fault environment; when it exceeds θ the
+``OnlineReconfigurator`` re-runs NSGA-II with runtime stats and the
+engine hot-swaps the layer->tier mapping (which changes which layers
+see faults, and on a real deployment would migrate the stage split).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (decode_step, encode, forward,
+                                      init_cache, prefill)
+
+__all__ = ["ServeConfig", "Request", "Engine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    canary_every: int = 16          # decode steps between canary evals
+    theta: float = 0.01
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Greedy-decode batch engine (enough substrate to serve the paper's
+    online phase; sampling strategies are orthogonal)."""
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig,
+                 fault_env=None, reconfigurator=None,
+                 partition_to_rates=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.fault_env = fault_env              # step -> device scales
+        self.reconf = reconfigurator            # OnlineReconfigurator
+        self.partition_to_rates = partition_to_rates
+        self._decode = jax.jit(
+            lambda p, c, t, pos, fault: decode_step(
+                p, cfg, c, t, pos, fault=fault))
+        self._decode_clean = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+        self._steps = 0
+        self.swap_events: list[int] = []
+
+    def _fault_triple(self):
+        """Current per-layer rates from the deployed partition + env."""
+        if self.reconf is None or self.partition_to_rates is None:
+            return None
+        scales = (self.fault_env.scales_at(self._steps)
+                  if self.fault_env is not None else None)
+        w, a = self.partition_to_rates(self.reconf.partition, scales)
+        return (jnp.asarray(w, jnp.float32), jnp.asarray(a, jnp.float32),
+                jnp.int32(self._steps))
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve a closed batch of requests to completion."""
+        cfg = self.cfg
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        maxnew = max(r.max_new_tokens for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):                 # left-pad-free: align
+            toks[i, S - len(r.prompt):] = r.prompt       # right-aligned
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, cache = prefill(self.params, cfg, batch, max_len=S + maxnew)
+        last = jnp.argmax(logits[:, -1], axis=-1)
+        pos = jnp.full((B,), S, jnp.int32)
+        for step in range(maxnew):
+            fault = self._fault_triple()
+            if fault is None:
+                logits, cache = self._decode_clean(
+                    self.params, cache, last, pos)
+            else:
+                logits, cache = self._decode(
+                    self.params, cache, last, pos, fault)
+            last = jnp.argmax(logits, axis=-1)
+            pos = pos + 1
+            self._steps += 1
+            nxt = np.asarray(last)
+            for i, r in enumerate(requests):
+                if not r.done and len(r.out) < r.max_new_tokens:
+                    r.out.append(int(nxt[i]))
+                    if len(r.out) >= r.max_new_tokens:
+                        r.done = True
+            if (self.reconf is not None
+                    and self._steps % self.scfg.canary_every == 0):
+                scales = self.fault_env.scales_at(self._steps)
+                before = self.reconf.partition.copy()
+                self.reconf.step(self._steps, scales)
+                if not np.array_equal(before, self.reconf.partition):
+                    self.swap_events.append(self._steps)
+        return requests

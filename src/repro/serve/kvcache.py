@@ -1,0 +1,68 @@
+"""KV-cache utilities shared by the serving engine and the dry-run.
+
+Cache layout comes from ``models.transformer.init_cache``; this module
+adds spec construction (ShapeDtypeStruct caches for lowering without
+allocation) and sequence-shard arithmetic for flash-decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import _cache_len  # shared layout rule
+
+__all__ = ["cache_specs", "cache_bytes"]
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                seq_shards: int = 1) -> dict:
+    """ShapeDtypeStruct pytree mirroring init_cache, with the sequence
+    dimension of attention caches divided by ``seq_shards`` (the local
+    shard shape under flash-decode sequence sharding)."""
+    dtype = cfg.jdtype
+    G = cfg.n_groups
+    entry = {}
+    for s, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "local", "global"):
+            Sc = _cache_len(cfg, kind, max_len)
+            assert Sc % seq_shards == 0, (kind, Sc, seq_shards)
+            Sl = Sc // seq_shards
+            entry[f"b{s}"] = {
+                "k": jax.ShapeDtypeStruct(
+                    (G, batch, Sl, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                "v": jax.ShapeDtypeStruct(
+                    (G, batch, Sl, cfg.n_kv_heads, cfg.head_dim_), dtype),
+                "pos": jax.ShapeDtypeStruct((G, batch, Sl), jnp.int32),
+            }
+        elif kind == "rglru":
+            W = cfg.lru_width or cfg.d_model
+            entry[f"b{s}"] = {
+                "conv": jax.ShapeDtypeStruct(
+                    (G, batch, cfg.conv_kernel - 1, W), dtype),
+                "h": jax.ShapeDtypeStruct((G, batch, W), jnp.float32),
+            }
+        elif kind == "ssd":
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            entry[f"b{s}"] = {
+                "conv": jax.ShapeDtypeStruct(
+                    (G, batch, cfg.conv_kernel - 1, d_in + 2 * cfg.ssm_state),
+                    dtype),
+                "h": jax.ShapeDtypeStruct(
+                    (G, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+            }
+    return entry
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_len: int) -> int:
+    specs = cache_specs(cfg, batch, max_len)
+    total = 0
+    for leaf in jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total

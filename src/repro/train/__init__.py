@@ -1,0 +1,9 @@
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.train_step import (cross_entropy_loss, init_train_state,
+                                    make_loss_fn, make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.compression import compress_psum, init_error_feedback
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cross_entropy_loss",
+           "init_train_state", "make_loss_fn", "make_train_step", "Trainer",
+           "TrainerConfig", "compress_psum", "init_error_feedback"]

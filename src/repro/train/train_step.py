@@ -1,0 +1,101 @@
+"""Loss + train step factory (single-pod data/tensor parallel path).
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for jax.jit / pjit with in/out shardings.  Microbatching (gradient
+accumulation) and a selectable remat policy keep the 33B-class configs
+within per-chip HBM at train_4k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["cross_entropy_loss", "make_loss_fn", "make_train_step",
+           "init_train_state"]
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy in fp32; labels == -1 are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ArchConfig, remat: bool = True,
+                 fault=None, unroll: bool = False,
+                 kv_chunk: int = 1024, ssd_chunk: int = 256,
+                 seq_axis: str | None = None) -> Callable:
+    def loss_fn(params, batch):
+        logits = forward(params, cfg,
+                         {k: v for k, v in batch.items() if k != "labels"},
+                         fault=fault, remat=remat, unroll=unroll,
+                         kv_chunk=kv_chunk, ssd_chunk=ssd_chunk,
+                         seq_axis=seq_axis)
+        return cross_entropy_loss(logits, batch["labels"])
+    return loss_fn
+
+
+def init_train_state(cfg: ArchConfig, params,
+                     opt_cfg: AdamWConfig | None = None):
+    return adamw_init(params, opt_cfg)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1, remat: bool = True,
+                    fault=None, unroll: bool = False,
+                    kv_chunk: int = 1024, ssd_chunk: int = 256,
+                    seq_axis: str | None = None) -> Callable:
+    """Gradient-accumulated train step.
+
+    The global batch is split into ``microbatches`` chunks along axis 0;
+    grads are accumulated in fp32 and averaged, then one AdamW update is
+    applied — identical math to a single large batch, bounded activation
+    memory.
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat, fault=fault, unroll=unroll,
+                           kv_chunk=kv_chunk, ssd_chunk=ssd_chunk,
+                           seq_axis=seq_axis)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                loss_sum, gacc = carry
+                loss, grads = grad_fn(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (loss_sum + loss, gacc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), g0), mb, unroll=unroll)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

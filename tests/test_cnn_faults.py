@@ -1,0 +1,97 @@
+"""CNNs + true fault-injected accuracy evaluation (the paper's inner loop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FaultSpec, InferenceAccuracyEvaluator,
+                        profile_layer_sensitivity)
+from repro.data import ImageClassData
+from repro.models.cnn import CNN_MODELS
+
+
+@pytest.fixture(scope="module")
+def data():
+    return ImageClassData(num_classes=8, img=16, seed=0)
+
+
+@pytest.mark.parametrize("name", list(CNN_MODELS))
+def test_cnn_forward_shapes(name, data):
+    model = CNN_MODELS[name]
+    params = model.init(jax.random.PRNGKey(0), num_classes=8, width=0.25,
+                        img=16)
+    x, y = data.batch(4, seed=1)
+    logits = model.apply(params, jnp.asarray(x))
+    assert logits.shape == (4, 8)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", list(CNN_MODELS))
+def test_cnn_fault_rates_monotone_degradation(name, data):
+    """Higher fault rate => output deviates more (paper Fig. 4 trend)."""
+    model = CNN_MODELS[name]
+    params = model.init(jax.random.PRNGKey(0), num_classes=8, width=0.25,
+                        img=16)
+    x, _ = data.batch(8, seed=2)
+    x = jnp.asarray(x)
+    n = model.n_units
+    clean = model.apply(params, x)
+    devs = []
+    for rate in (0.05, 0.2, 0.5):
+        r = jnp.full((n,), rate, jnp.float32)
+        noisy = model.apply(params, x, w_rates=r, a_rates=r, seed=5)
+        devs.append(float(jnp.mean(jnp.abs(noisy - clean))))
+    assert devs[0] < devs[1] < devs[2]
+
+
+def test_fault_eval_zero_rate_keeps_quantized_accuracy(data):
+    model = CNN_MODELS["alexnet"]
+    params = model.init(jax.random.PRNGKey(1), num_classes=8, width=0.25,
+                        img=16)
+    x, y = data.batch(16, seed=3)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    zero = jnp.zeros((model.n_units,), jnp.float32)
+    a = model.apply(params, x, w_rates=zero, a_rates=zero, seed=0)
+    b = model.apply(params, x)
+    # zero-rate path still fake-quantizes => close but maybe not identical
+    assert float(jnp.mean(jnp.abs(a - b))) < 0.1
+
+
+def test_inference_accuracy_evaluator_caches(data):
+    model = CNN_MODELS["squeezenet"]
+    params = model.init(jax.random.PRNGKey(2), num_classes=8, width=0.25,
+                        img=16)
+    x, y = data.batch(32, seed=4)
+
+    def apply_fn(p, xx, wr, ar, seed):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=seed)
+
+    ev = InferenceAccuracyEvaluator(
+        apply_fn, params, jnp.asarray(x), jnp.asarray(y),
+        FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2),
+        device_fault_scale=np.array([1.0, 0.1]))
+    P = np.zeros((3, model.n_units), np.int64)
+    P[1] = 1
+    P[2] = 1
+    d = ev.delta_acc(P)
+    assert d.shape == (3,)
+    assert (d >= 0).all()
+    assert len(ev._cache) == 2          # rows 1 and 2 identical -> cached
+    # all-reliable mapping should not degrade more than all-faulty
+    assert d[1] <= d[0] + 1e-9
+
+
+def test_layer_sensitivity_profile(data):
+    model = CNN_MODELS["alexnet"]
+    params = model.init(jax.random.PRNGKey(3), num_classes=8, width=0.25,
+                        img=16)
+    x, y = data.batch(32, seed=5)
+
+    def apply_fn(p, xx, wr, ar, seed):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=seed)
+
+    sens = profile_layer_sensitivity(
+        apply_fn, params, jnp.asarray(x), jnp.asarray(y), model.n_units,
+        FaultSpec(weight_fault_rate=0.4, act_fault_rate=0.4))
+    assert sens.shape == (model.n_units,)
+    assert (sens >= 0).all()

@@ -1,0 +1,91 @@
+"""LayerGraph extraction + roofline machinery unit tests."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                   collective_bytes_from_hlo, model_flops,
+                                   roofline_terms)
+from repro.models.graph import lm_layer_infos
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_layer_graph_covers_all_layers(arch):
+    cfg = get_config(arch)
+    infos = lm_layer_infos(cfg, seq=4096)
+    expected = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0)
+    assert len(infos) == expected
+    assert all(li.macs > 0 for li in infos)
+    assert all(li.weight_bytes > 0 for li in infos)
+    assert all(li.sensitivity > 0 for li in infos)
+
+
+def test_layer_graph_weights_track_param_count():
+    """Sum of per-layer params ~ total param count minus embeddings."""
+    for arch in ("olmo-1b", "deepseek-coder-33b", "mixtral-8x7b"):
+        cfg = get_config(arch)
+        infos = lm_layer_infos(cfg)
+        layer_params = sum(li.params for li in infos)
+        embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        total = cfg.param_count()
+        assert abs(layer_params - (total - embed)) / total < 0.1, arch
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,4096]{1,0} all-gather(bf16[1,4096]{1,0} %p0), dims={0}
+  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %p1), to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %p2), dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(bf16[8,128]{1,0} %p3)
+  %other = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+"""
+    got = collective_bytes_from_hlo(hlo)
+    expect = (16 * 4096 * 2            # all-gather: output bytes
+              + 2 * 1024 * 4           # all-reduce: 2x input
+              + 1024 * 4               # reduce-scatter: input
+              + 8 * 128 * 2)           # collective-permute: input
+    assert got == expect, (got, expect)
+
+
+def test_roofline_terms_bottleneck():
+    rec = {"n_chips": 256,
+           "flops": 256 * PEAK_FLOPS * 2.0,          # 2s compute
+           "bytes_accessed": 256 * HBM_BW * 1.0,     # 1s memory
+           "collective_bytes": 256 * LINK_BW * 0.5}  # .5s collective
+    r = roofline_terms(rec)
+    assert r["bottleneck"] == "compute"
+    assert abs(r["compute_s"] - 2.0) < 1e-9
+    assert abs(r["step_time_lower_bound_s"] - 2.0) < 1e-9
+
+
+def test_model_flops_conventions():
+    cfg = get_config("olmo-1b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    decode = model_flops(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert abs(train - 6 * n * 4096 * 256) / train < 1e-6
+    assert abs(prefill - 2 * n * 32768 * 32) / prefill < 1e-6
+    assert abs(decode - 2 * n * 128) / decode < 1e-6
+    # MoE uses active params
+    moe = get_config("mixtral-8x7b")
+    assert model_flops(moe, SHAPES["train_4k"]) < \
+        6 * moe.param_count() * 4096 * 256
+
+
+def test_param_spec_divisibility_guard():
+    import jax.numpy as jnp
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.shardings import _divisible
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+    spec = _divisible(P("model", "data"), (50280, 2560), FakeMesh)
+    assert spec == P(None, "data")
+    spec = _divisible(P("model", "data"), (50304, 2560), FakeMesh)
+    assert spec == P("model", "data")

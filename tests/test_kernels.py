@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps asserting exact (or fp-tolerance)
+agreement with the pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.quant.fixedpoint import QuantSpec, quantize
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [(1,), (5,), (128,), (129,), (64, 64), (300, 5), (33, 17, 3),
+          (2, 3, 4, 5)]
+DTYPES = [jnp.int8, jnp.int32]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bitflip_matches_ref(shape, dtype):
+    hi = 100 if dtype == jnp.int8 else 2 ** 14
+    q = jnp.asarray(RNG.integers(-hi, hi, size=shape), dtype)
+    out = ops.bitflip(q, 42, 0.2, 4)
+    ref = ops.bitflip_ref(q, jnp.int32(42), 0.2, 4)
+    assert out.dtype == dtype and out.shape == q.shape
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+def test_bitflip_touches_only_lsbs(bits):
+    q = jnp.asarray(RNG.integers(-2 ** 14, 2 ** 14, size=(512,)), jnp.int32)
+    out = ops.bitflip(q, 3, 0.5, bits)
+    diff = np.asarray(jnp.bitwise_xor(out, q))
+    assert (diff >= 0).all() and (diff < (1 << bits)).all()
+
+
+def test_bitflip_rate_statistics():
+    """Empirical per-bit flip rate ~= configured rate (paper Alg. 2)."""
+    q = jnp.zeros((100_000,), jnp.int32)
+    for rate in (0.1, 0.2, 0.4):
+        out = ops.bitflip(q, 11, rate, 4)
+        for b in range(4):
+            frac = float(jnp.mean(((out >> b) & 1).astype(jnp.float32)))
+            assert abs(frac - rate) < 0.01, (rate, b, frac)
+
+
+def test_bitflip_deterministic_and_seed_sensitive():
+    q = jnp.asarray(RNG.integers(-100, 100, size=(1000,)), jnp.int32)
+    a = ops.bitflip(q, 5, 0.3, 4)
+    b = ops.bitflip(q, 5, 0.3, 4)
+    c = ops.bitflip(q, 6, 0.3, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(c)).any()
+
+
+def test_bitflip_zero_rate_identity():
+    q = jnp.asarray(RNG.integers(-100, 100, size=(257,)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.bitflip(q, 0, 0.0, 4)), np.asarray(q))
+
+
+@pytest.mark.parametrize("shape", [(64,), (257, 3), (128, 128), (31, 33, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_bitflip_matches_ref(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    out = ops.quant_bitflip(x, 9, 0.25, 4)
+    ref = ops.quant_bitflip_ref(x, jnp.int32(9), jnp.float32(0.25), 4)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=0, atol=0)
+
+
+def test_quant_bitflip_zero_rate_is_fake_quant():
+    from repro.quant.fixedpoint import fake_quant
+    x = jnp.asarray(RNG.normal(size=(300,)), jnp.float32)
+    out = ops.quant_bitflip(x, 0, 0.0, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fake_quant(x)),
+                               atol=1e-7)
+
+
+def test_quant_bitflip_error_bounded():
+    """LSB faults perturb each value by < 16 quantization steps."""
+    x = jnp.asarray(RNG.normal(size=(4096,)), jnp.float32)
+    out = ops.quant_bitflip(x, 3, 1.0, 4)     # worst case: all 4 LSBs flip
+    scale = float(jnp.max(jnp.abs(x))) / (2 ** 15 - 1)
+    assert float(jnp.max(jnp.abs(out - x))) <= 16 * scale + 1e-6
+
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (64, 200, 96),
+                                 (130, 260, 390), (1, 512, 1024),
+                                 (257, 129, 65)])
+def test_fault_matmul_matches_ref(mkn):
+    m, k, n = mkn
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(16))
+    out = ops.fault_matmul(x, qw, scale, 3, 0.2, 4)
+    ref = ops.fault_matmul_ref(x, qw, scale, jnp.int32(3),
+                               jnp.float32(0.2), 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fault_matmul_zero_rate_equals_clean():
+    x = jnp.asarray(RNG.normal(size=(16, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(16))
+    out = ops.fault_matmul(x, qw, scale, 0, 0.0, 4)
+    clean = x @ (qw.astype(jnp.float32) * scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(clean), atol=1e-4)
+
+
+def test_traced_rate_single_compile():
+    """One executable serves all fault rates (rates are traced)."""
+    calls = {"n": 0}
+
+    @jax.jit
+    def f(x, rate):
+        calls["n"] += 1
+        return ops.quant_bitflip(x, 1, rate, 4)
+
+    x = jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)
+    outs = [f(x, jnp.float32(r)) for r in (0.0, 0.1, 0.2, 0.4)]
+    assert calls["n"] == 1          # traced once
+    # higher rate => more corruption
+    errs = [float(jnp.abs(o - x).sum()) for o in outs]
+    assert errs[0] < errs[1] < errs[2] < errs[3]

@@ -1,0 +1,117 @@
+"""NSGA-II invariants: brute-force agreement + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsga2 import (NSGA2Config, crowding_distance,
+                              fast_non_dominated_sort, nsga2, pareto_mask)
+
+
+def brute_force_rank0(F):
+    n = F.shape[0]
+    out = np.zeros(n, bool)
+    for i in range(n):
+        dominated = any(((F[j] <= F[i]).all() and (F[j] < F[i]).any())
+                        for j in range(n) if j != i)
+        out[i] = not dominated
+    return out
+
+
+@given(st.integers(0, 10_000), st.integers(2, 40), st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_rank0_matches_brute_force(seed, n, m):
+    F = np.random.default_rng(seed).random((n, m))
+    assert (pareto_mask(F) == brute_force_rank0(F)).all()
+
+
+@given(st.integers(0, 10_000), st.integers(3, 30))
+@settings(max_examples=25, deadline=None)
+def test_ranks_are_layered(seed, n):
+    """Removing front r must make front r+1 the new non-dominated set."""
+    F = np.random.default_rng(seed).random((n, 3))
+    ranks = fast_non_dominated_sort(F)
+    assert ranks.min() == 0
+    for r in range(ranks.max()):
+        rest = F[ranks > r]
+        if rest.shape[0] == 0:
+            continue
+        sub = fast_non_dominated_sort(rest)
+        np.testing.assert_array_equal(sub == 0,
+                                      (ranks[ranks > r]) == r + 1)
+
+
+def test_crowding_boundary_infinite():
+    F = np.array([[0.0, 1.0], [0.5, 0.5], [1.0, 0.0]])
+    ranks = np.zeros(3, np.int64)
+    d = crowding_distance(F, ranks)
+    assert np.isinf(d[0]) and np.isinf(d[2]) and np.isfinite(d[1])
+
+
+def test_constrained_dominance_prefers_feasible():
+    F = np.array([[0.0, 0.0], [1.0, 1.0]])       # idx0 better objectives
+    viol = np.array([1.0, 0.0])                  # ...but infeasible
+    ranks = fast_non_dominated_sort(F, viol)
+    assert ranks[1] == 0 and ranks[0] == 1
+
+
+def test_nsga2_converges_on_separable_problem():
+    """min (sum(x), sum(1-x)) over binary genes: full front reachable."""
+    def eval_fn(P):
+        ones = P.sum(axis=1).astype(float)
+        return np.stack([ones, P.shape[1] - ones], axis=1)
+
+    res = nsga2(eval_fn, n_genes=10, n_devices=2,
+                config=NSGA2Config(population=40, generations=25, seed=3))
+    covered = {int(p.sum()) for p in res.pareto_pop}
+    assert len(covered) >= 9
+    assert res.evaluations == 40 * 26
+
+
+def test_nsga2_front_is_nondominated():
+    rng = np.random.default_rng(0)
+    W = rng.random((3, 12))
+
+    def eval_fn(P):
+        return P @ W.T + 0.1 * (P == 0).sum(axis=1, keepdims=True)
+
+    res = nsga2(eval_fn, n_genes=12, n_devices=3,
+                config=NSGA2Config(population=30, generations=15, seed=1))
+    assert pareto_mask(res.pareto_objs).all()
+
+
+def test_nsga2_respects_constraints():
+    """Constraint: at most 3 genes may be device 1."""
+    def eval_fn(P):
+        return np.stack([P.sum(1).astype(float),
+                         (P == 0).sum(1).astype(float)], 1)
+
+    def viol(P):
+        return np.maximum(0.0, (P == 1).sum(1) - 3).astype(float)
+
+    res = nsga2(eval_fn, n_genes=10, n_devices=2,
+                config=NSGA2Config(population=40, generations=30, seed=0),
+                violation_fn=viol)
+    assert (viol(res.pareto_pop) == 0).all()
+
+
+def test_nsga2_seeded_population_is_used():
+    target = np.full((1, 8), 1, np.int64)
+
+    def eval_fn(P):
+        # strongly favour the seeded chromosome
+        d = np.abs(P - 1).sum(1).astype(float)
+        return np.stack([d, d], axis=1)
+
+    res = nsga2(eval_fn, n_genes=8, n_devices=4,
+                config=NSGA2Config(population=20, generations=2, seed=0),
+                initial_pop=target)
+    assert any((p == 1).all() for p in res.pareto_pop)
+
+
+def test_nsga2_deterministic():
+    def eval_fn(P):
+        return np.stack([P.sum(1).astype(float),
+                         (P == 0).sum(1).astype(float)], 1)
+    r1 = nsga2(eval_fn, 6, 2, NSGA2Config(population=16, generations=5, seed=9))
+    r2 = nsga2(eval_fn, 6, 2, NSGA2Config(population=16, generations=5, seed=9))
+    np.testing.assert_array_equal(r1.pareto_pop, r2.pareto_pop)

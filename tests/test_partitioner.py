@@ -1,0 +1,96 @@
+"""AFarePart offline phase: cost model + objectives + tool comparison."""
+import numpy as np
+import pytest
+
+from repro.core import (AFarePart, CNNPartedLike, CostModel,
+                        FaultUnawareBaseline, FaultSpec, NSGA2Config,
+                        PAPER_DEVICES, SurrogateAccuracyEvaluator)
+from repro.core.partitioner import contiguous_stages
+from repro.models.cnn import AlexNet, ResNet18, SqueezeNet
+
+
+@pytest.fixture(scope="module")
+def layers():
+    return ResNet18.layer_infos(num_classes=16, width=0.5, img=32)
+
+
+def test_cost_model_latency_energy_positive(layers):
+    cm = CostModel(layers, PAPER_DEVICES)
+    P = np.zeros((4, len(layers)), np.int64)
+    P[1] = 1
+    lat = cm.latency(P)
+    en = cm.energy_of(P)
+    assert (lat > 0).all() and (en > 0).all()
+    # SIMBA (dev 1) is faster than Eyeriss (dev 0) on every layer
+    assert lat[1] < lat[0]
+
+
+def test_cost_model_link_costs_add_latency(layers):
+    cm0 = CostModel(layers, PAPER_DEVICES, include_link_costs=False)
+    cm1 = CostModel(layers, PAPER_DEVICES, include_link_costs=True)
+    P = np.arange(len(layers))[None, :] % 2        # alternating: many cuts
+    assert cm1.latency(P)[0] > cm0.latency(P)[0]
+    assert cm1.energy_of(P)[0] > cm0.energy_of(P)[0]
+
+
+def test_sensitivity_surrogate_monotone(layers):
+    cm = CostModel(layers, PAPER_DEVICES)
+    all_reliable = np.full((1, len(layers)), 1, np.int64)   # SIMBA scale .35
+    all_faulty = np.zeros((1, len(layers)), np.int64)       # Eyeriss scale 1.
+    assert cm.sensitivity_surrogate(all_faulty)[0] > \
+        cm.sensitivity_surrogate(all_reliable)[0]
+
+
+def test_afarepart_beats_fault_unaware_on_surrogate(layers):
+    """The paper's core claim, on the surrogate: fault-aware partitioning
+    yields a deployment with lower ΔAcc at bounded overhead."""
+    cfg = NSGA2Config(population=24, generations=20, seed=0)
+    ev = SurrogateAccuracyEvaluator(CostModel(layers, PAPER_DEVICES))
+    aware = AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
+                      nsga2_config=cfg).optimize()
+    unaware = FaultUnawareBaseline(layers, PAPER_DEVICES,
+                                   nsga2_config=cfg).optimize()
+    cm = ev.cm
+    d_aware = cm.sensitivity_surrogate(aware.partition[None, :])[0]
+    d_unaware = cm.sensitivity_surrogate(unaware.partition[None, :])[0]
+    assert d_aware <= d_unaware
+    # overhead bounded: paper reports ~9.7% latency / 4.3% energy overhead
+    assert aware.latency <= unaware.latency * 2.0
+
+
+def test_cnnparted_like_runs(layers):
+    plan = CNNPartedLike(layers, PAPER_DEVICES,
+                         nsga2_config=NSGA2Config(population=16,
+                                                  generations=8)).optimize()
+    assert plan.partition.shape == (len(layers),)
+    assert np.isnan(plan.delta_acc)     # 2-objective tool
+
+
+def test_pareto_front_shape(layers):
+    ev = SurrogateAccuracyEvaluator(CostModel(layers, PAPER_DEVICES))
+    plan = AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
+                     nsga2_config=NSGA2Config(population=16,
+                                              generations=8)).optimize()
+    assert plan.front.ndim == 2 and plan.front_objs.shape[1] == 3
+    assert plan.front.shape[0] == plan.front_objs.shape[0] >= 1
+
+
+@pytest.mark.parametrize("n_stages", [2, 3, 4])
+def test_contiguous_stages(n_stages):
+    part = np.array([0, 0, 1, 1, 1, 0, 0, 1, 1, 0])
+    cuts = contiguous_stages(part, n_stages)
+    assert cuts[0] == 0 and cuts[-1] == len(part)
+    assert all(a < b for a, b in zip(cuts, cuts[1:]))
+    assert len(cuts) == n_stages + 1
+
+
+def test_contiguous_stages_constant_partition():
+    cuts = contiguous_stages(np.zeros(9, np.int64), 2)
+    assert cuts == [0, 4, 9] or cuts == [0, 5, 9]
+
+
+def test_layer_infos_all_models():
+    for m, n in [(AlexNet, 8), (SqueezeNet, 10), (ResNet18, 10)]:
+        infos = m.layer_infos()
+        assert len(infos) == n == m.n_units
+        assert all(li.macs > 0 and li.weight_bytes > 0 for li in infos)

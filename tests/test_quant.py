@@ -1,0 +1,59 @@
+"""Fixed-point quantization properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.fixedpoint import (QuantSpec, dequantize, fake_quant,
+                                    quantize, quantize_tree, dequantize_tree)
+
+
+@given(st.integers(0, 5000), st.sampled_from([8, 16]))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_error_bounded(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(256,)) * rng.uniform(0.1, 100),
+                    jnp.float32)
+    spec = QuantSpec(bits)
+    err = jnp.max(jnp.abs(fake_quant(x, spec) - x))
+    # symmetric quant: |err| <= scale/2 = max|x| / (2^(b-1)-1) / 2,
+    # plus float32 rounding slack in the scale division
+    bound = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1) / 2 + 1e-12
+    assert float(err) <= bound * 1.1
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_range(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(128,)) * 17, jnp.float32)
+    spec = QuantSpec(16)
+    q, scale = quantize(x, spec)
+    assert int(jnp.max(q)) <= spec.qmax and int(jnp.min(q)) >= spec.qmin
+    # max magnitude maps to the top of the range
+    assert int(jnp.max(jnp.abs(q))) == spec.qmax
+
+
+def test_per_channel_scales():
+    x = jnp.stack([jnp.ones(8) * 1.0, jnp.ones(8) * 100.0])
+    spec = QuantSpec(8, per_channel_axis=0)
+    q, scale = quantize(x, spec)
+    assert scale.shape == (2, 1)
+    rec = dequantize(q, scale, spec)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(x), rtol=1e-2)
+
+
+def test_zero_tensor_safe():
+    x = jnp.zeros((32,), jnp.float32)
+    q, scale = quantize(x)
+    assert np.isfinite(float(scale))
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+def test_tree_roundtrip():
+    tree = {"a": jnp.asarray([1.0, -2.0, 3.0]),
+            "b": {"c": jnp.asarray([[0.5, 0.25]]),
+                  "ints": jnp.asarray([1, 2, 3])}}
+    q, s = quantize_tree(tree)
+    rec = dequantize_tree(q, s)
+    np.testing.assert_allclose(np.asarray(rec["a"]), [1, -2, 3], rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(rec["b"]["ints"]), [1, 2, 3])

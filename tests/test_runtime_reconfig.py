@@ -1,0 +1,73 @@
+"""Online phase (paper Alg. 1, lines 13-19): dynamic reconfiguration."""
+import numpy as np
+import pytest
+
+from repro.core import (AFarePart, CostModel, FaultEnvironment, NSGA2Config,
+                        OnlineReconfigurator, PAPER_DEVICES,
+                        SurrogateAccuracyEvaluator, simulate_deployment)
+from repro.models.cnn import ResNet18
+
+
+@pytest.fixture()
+def setup():
+    layers = ResNet18.layer_infos(num_classes=16, width=0.5, img=32)
+    cm = CostModel(layers, PAPER_DEVICES)
+    ev = SurrogateAccuracyEvaluator(cm)
+    part = AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
+                     nsga2_config=NSGA2Config(population=20, generations=10,
+                                              seed=0))
+    plan = part.optimize()
+    return layers, cm, ev, part, plan
+
+
+def _observe_fn(cm):
+    def observe(partition, device_scales):
+        old = cm.fault_scale.copy()
+        cm.fault_scale = np.asarray(device_scales, float)
+        val = float(cm.sensitivity_surrogate(partition[None, :])[0])
+        cm.fault_scale = old
+        return val
+    return observe
+
+
+def test_no_reconfig_below_threshold(setup):
+    layers, cm, ev, part, plan = setup
+    rec = OnlineReconfigurator(part, plan, theta=1e9,
+                               observe_fn=_observe_fn(cm))
+    env = FaultEnvironment(base_scale=np.array([1.0, 0.35]))
+    log = simulate_deployment(rec, env, n_steps=5)
+    assert len(log["events"]) == 0
+
+
+def test_reconfig_triggers_on_environment_shift(setup):
+    """A device turning glitchy mid-run must trigger repartitioning, and
+    the new partition must reduce the observed accuracy drop."""
+    layers, cm, ev, part, plan = setup
+    obs = _observe_fn(cm)
+    base = np.array([1.0, 0.35])
+    # step 3: device 1 (previously the reliable one) degrades badly
+    env = FaultEnvironment(base_scale=base,
+                           schedule={3: np.array([1.0, 25.0])})
+    theta = obs(plan.partition, base) * 1.5 + 1e-9
+    rec = OnlineReconfigurator(part, plan, theta=theta, observe_fn=obs,
+                               reopt_generations=8)
+    log = simulate_deployment(rec, env, n_steps=8)
+    assert len(log["events"]) >= 1, "reconfiguration should have fired"
+    ev0 = log["events"][0]
+    after = obs(rec.partition, env.scales_at(7))
+    assert after <= ev0.observed_delta_acc, \
+        "repartitioning should reduce the observed drop"
+    # moved layers off the glitchy device
+    assert (rec.partition == 1).sum() <= (ev0.old_partition == 1).sum()
+
+
+def test_reconfig_event_bookkeeping(setup):
+    layers, cm, ev, part, plan = setup
+    obs = _observe_fn(cm)
+    env = FaultEnvironment(base_scale=np.array([30.0, 30.0]))
+    rec = OnlineReconfigurator(part, plan, theta=1e-6, observe_fn=obs,
+                               reopt_generations=3)
+    simulate_deployment(rec, env, n_steps=3)
+    for e in rec.events:
+        assert e.new_partition.shape == plan.partition.shape
+        assert e.observed_delta_acc > 1e-6
