@@ -98,15 +98,39 @@ def eval_batch(n=512, seed=99):
 
 
 def make_evaluator(name: str, params, fault_spec: FaultSpec,
-                   n_eval=512) -> InferenceAccuracyEvaluator:
+                   n_eval=512, eval_batch_size=None,
+                   use_weight_tables=True) -> InferenceAccuracyEvaluator:
+    """Population-batched ΔAcc evaluator for one of the paper's CNNs.
+
+    ``use_weight_tables`` pre-corrupts weights per (unit, device) so the
+    NSGA-II hot loop only gathers them (bit-identical, much faster);
+    ``eval_batch_size`` caps chromosomes per device dispatch.  When left
+    None it is auto-derived: small calibration batches are dispatch-bound
+    and want the whole population in one vmapped call, while paper-scale
+    512-sample batches are compute-bound (and memory-heavy — activations
+    scale with rows × images), where narrow chunks win.  Chunking never
+    changes results, only dispatch count.
+    """
+    from repro.models.cnn import build_weight_fault_tables
     model = CNN_MODELS[name]
     x, y = eval_batch(n_eval)
+    if eval_batch_size is None and n_eval >= 16:
+        # ~512 images of activations per dispatch
+        eval_batch_size = max(1, 512 // n_eval)
 
     def apply_fn(p, xx, wr, ar, seed):
         return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=seed)
 
+    tables = None
+    if use_weight_tables:
+        w_rates = np.asarray(fault_spec.weight_fault_rate
+                             * np.asarray(DEVICE_FAULT_SCALE, np.float32),
+                             np.float32)
+        tables = build_weight_fault_tables(params, w_rates, base_seed=0)
     return InferenceAccuracyEvaluator(apply_fn, params, x, y, fault_spec,
-                                      DEVICE_FAULT_SCALE)
+                                      DEVICE_FAULT_SCALE,
+                                      eval_batch_size=eval_batch_size,
+                                      weight_tables=tables)
 
 
 def accuracy_under_partition(name: str, params, partition: np.ndarray,

@@ -2,10 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.hillclimb --arch X --shape Y \
         --variant name [--multi-pod]
+    PYTHONPATH=src python -m benchmarks.hillclimb --target eval-engine \
+        [--model alexnet] [--pop 60] [--eval-batch-size N]
 
-Variants are named override bundles (see VARIANTS).  Every run appends
-an iteration record to results/perf_iterations.jsonl with the three
-roofline terms so EXPERIMENTS.md §Perf can show the full path.
+Two targets share the same iteration log:
+
+  * ``roofline`` (default) — lower/compile one (arch x shape x mesh)
+    cell with a named override bundle (see VARIANTS) and record the
+    three roofline terms;
+  * ``eval-engine`` — time the population-batched ΔAcc evaluation
+    engine (benchmarks/eval_engine.py) at a given population /
+    ``--eval-batch-size`` and record per-candidate latency + speedup,
+    so engine optimisations hillclimb through the same
+    results/perf_iterations.jsonl history as kernel/collective ones.
 """
 from __future__ import annotations
 
@@ -82,14 +91,43 @@ def run(arch: str, shape: str, variant: str, multi_pod: bool):
     return rec
 
 
+def run_eval_engine(model: str, pop: int, eval_batch_size: int | None):
+    from benchmarks.eval_engine import run_benchmark
+    rec = run_benchmark(model_name=model, pop=pop,
+                        eval_batch_size=eval_batch_size)
+    rec["target"] = "eval-engine"
+    os.makedirs(os.path.dirname(LOG), exist_ok=True)
+    with open(LOG, "a") as f:
+        f.write(json.dumps(rec, default=float) + "\n")
+    ms = rec["per_candidate_ms"]
+    print(f"eval-engine {model} pop={pop} ebs={eval_batch_size}: "
+          f"loop={ms['loop']:.3f}ms/cand "
+          f"batched={ms['batched']:.3f} tables={ms['batched_tables']:.3f} "
+          f"speedup={rec['speedup_vs_loop']['batched_tables']:.2f}x")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--target", default="roofline",
+                    choices=["roofline", "eval-engine"])
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--variant", default="baseline",
                     choices=sorted(VARIANTS))
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--model", default="alexnet",
+                    help="eval-engine target: CNN to evaluate")
+    ap.add_argument("--pop", type=int, default=60,
+                    help="eval-engine target: population size")
+    ap.add_argument("--eval-batch-size", type=int, default=None,
+                    help="eval-engine target: chromosomes per dispatch")
     args = ap.parse_args()
+    if args.target == "eval-engine":
+        run_eval_engine(args.model, args.pop, args.eval_batch_size)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required for --target roofline")
     run(args.arch, args.shape, args.variant, args.multi_pod)
 
 

@@ -29,6 +29,22 @@ POP, GEN = (30, 25) if QUICK else (60, 60)
 FAULT_RATE = 0.2
 
 
+def _int_flag(name: str, default=None):
+    for i, arg in enumerate(sys.argv):
+        if arg == name:
+            if i + 1 >= len(sys.argv):
+                sys.exit(f"{name} requires an integer value")
+            return int(sys.argv[i + 1])
+        if arg.startswith(name + "="):
+            return int(arg.split("=", 1)[1])
+    return default
+
+
+# cap chromosomes per ΔAcc device dispatch (memory knob; results
+# unchanged — see src/repro/core/eval_engine.py)
+EVAL_BATCH = _int_flag("--eval-batch-size")
+
+
 def _partitioners(name, params, fault_spec):
     from benchmarks._cnn_setup import make_evaluator
     from repro.core import (AFarePart, CNNPartedLike, FaultUnawareBaseline,
@@ -37,13 +53,14 @@ def _partitioners(name, params, fault_spec):
 
     layers = CNN_MODELS[name].layer_infos(num_classes=16, width=0.5, img=32)
     cfg = NSGA2Config(population=POP, generations=GEN, seed=0)
-    ev = make_evaluator(name, params, fault_spec)
+    ev = make_evaluator(name, params, fault_spec, eval_batch_size=EVAL_BATCH)
     tools = {
         "CNNParted": CNNPartedLike(layers, PAPER_DEVICES, nsga2_config=cfg),
         "Flt-unaware": FaultUnawareBaseline(layers, PAPER_DEVICES,
                                             nsga2_config=cfg),
         "AFarePart": AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
-                               nsga2_config=cfg),
+                               nsga2_config=cfg,
+                               eval_batch_size=EVAL_BATCH),
     }
     return layers, {k: v.optimize() for k, v in tools.items()}, ev
 

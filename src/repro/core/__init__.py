@@ -3,6 +3,7 @@
   fault.py       — fault model (Sec. III): LSB bit-flip spec + contexts
   costmodel.py   — analytical latency/energy per (layer, device)
   nsga2.py       — vectorised NSGA-II with constrained dominance
+  eval_engine.py — population-batched dedup/cache/chunk dispatch engine
   objectives.py  — (latency, energy, ΔAcc) evaluation of partitions
   partitioner.py — offline phase (Alg. 1, lines 1-12) + baselines
   runtime.py     — online dynamic reconfiguration (Alg. 1, lines 13-19)
@@ -10,6 +11,7 @@
 from repro.core.costmodel import (CostModel, DeviceProfile, LayerInfo,
                                   EYERISS, SIMBA, TPU_V5E, TPU_V5E_LOWVOLT,
                                   PAPER_DEVICES, POD_TIERS)
+from repro.core.eval_engine import PopulationEvalEngine
 from repro.core.fault import FaultSpec, FaultContext, PAPER_FAULT_SPEC
 from repro.core.nsga2 import NSGA2Config, nsga2, fast_non_dominated_sort
 from repro.core.objectives import (InferenceAccuracyEvaluator,
@@ -26,6 +28,7 @@ __all__ = [
     "TPU_V5E", "TPU_V5E_LOWVOLT", "PAPER_DEVICES", "POD_TIERS",
     "FaultSpec", "FaultContext", "PAPER_FAULT_SPEC",
     "NSGA2Config", "nsga2", "fast_non_dominated_sort",
+    "PopulationEvalEngine",
     "InferenceAccuracyEvaluator", "SurrogateAccuracyEvaluator",
     "ObjectiveFn", "profile_layer_sensitivity",
     "AFarePart", "CNNPartedLike", "FaultUnawareBaseline", "PartitionPlan",

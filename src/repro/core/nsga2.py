@@ -136,6 +136,14 @@ def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
 
     Args:
       eval_fn: [N, L] int chromosomes -> [N, M] objective matrix (minimise).
+        **Contract:** eval_fn receives the whole population in ONE call
+        per generation and must return the full [N, M] matrix from that
+        call — nsga2 never loops over individuals, so a batched
+        evaluator (e.g. ``ObjectiveFn`` backed by a ``jit(vmap)``
+        ΔAcc engine) keeps device dispatch count O(generations), not
+        O(generations × population).  Memory capping belongs inside
+        eval_fn (``ObjectiveFn.eval_batch_size`` chunks the unique
+        chromosomes per dispatch without changing results).
       n_genes: chromosome length L (number of layers).
       n_devices: alphabet size D (number of devices/tiers).
       violation_fn: optional [N, L] -> [N] constraint violation (<=0 feasible).
@@ -154,7 +162,15 @@ def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
     else:
         pop = rng.integers(0, n_devices, size=(N, n_genes))
 
-    objs = np.asarray(eval_fn(pop), dtype=np.float64)
+    def _eval(P):
+        objs = np.asarray(eval_fn(P), dtype=np.float64)
+        if objs.ndim != 2 or objs.shape[0] != P.shape[0]:
+            raise ValueError(
+                f"eval_fn must map the full [N, L] population to [N, M] in "
+                f"one call; got {objs.shape} for N={P.shape[0]}")
+        return objs
+
+    objs = _eval(pop)
     viol = violation_fn(pop) if violation_fn is not None else None
     evaluations = N
     history = []
@@ -167,7 +183,7 @@ def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
         children = _crossover(rng, pop[pa], pop[pb], config.crossover_rate)
         children = _mutate(rng, children, n_devices, config.mutation_rate)
 
-        child_objs = np.asarray(eval_fn(children), dtype=np.float64)
+        child_objs = _eval(children)
         child_viol = violation_fn(children) if violation_fn is not None else None
         evaluations += N
 

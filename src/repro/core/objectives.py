@@ -18,6 +18,27 @@ population).  ΔAcc comes from one of two evaluators:
 Both are deterministic given (partition, seed) so NSGA-II results are
 reproducible — the paper calls out non-reproducibility under transient
 faults as a failure mode of existing tools.
+
+Population batching
+-------------------
+``InferenceAccuracyEvaluator.delta_acc`` takes the whole ``[N, L]``
+population and evaluates every unique uncached chromosome in ONE
+``jit(vmap)`` dispatch (optionally chunked by ``eval_batch_size`` to cap
+device memory).  Two batched paths exist:
+
+  * generic — vmap over per-layer ``(weight_rates, act_rates)`` vectors;
+    works for any ``apply_fn``;
+  * weight-table — when ``weight_tables`` is given (see
+    ``repro.models.cnn.build_weight_fault_tables``): corrupted weights
+    depend only on (layer, device) because the seed is fixed and rates
+    factor as ``base_rate * device_fault_scale[P_l]``, so they are
+    precomputed once per search and *gathered* per candidate instead of
+    re-hashed.  This removes the O(params · faulty_bits) per-candidate
+    PRNG work and is bit-identical to the inline path.
+
+Both batched paths produce results bit-identical to the per-individual
+loop (the per-row computation is unchanged; vmap only adds the
+population axis), which tests/test_eval_engine.py locks in.
 """
 from __future__ import annotations
 
@@ -29,6 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostModel
+from repro.core.eval_engine import (PopulationEvalEngine, chunked_rows,
+                                    pad_rows)
 from repro.core.fault import FaultSpec
 
 __all__ = [
@@ -42,26 +65,120 @@ class InferenceAccuracyEvaluator:
 
     ``apply_fn(params, x, weight_rates, act_rates, seed)`` must run the
     model with per-layer fault rates (traced vectors of length L) and
-    return logits.  One jitted executable serves the whole search.
+    return logits.  One jitted executable serves the whole search; the
+    population axis is added with ``vmap`` so each ``delta_acc`` call
+    costs one dispatch per unique-uncached chunk, not one per candidate.
+
+    Args:
+      eval_batch_size: max chromosomes per dispatch (None = whole
+        unique batch in one dispatch).  Caps device memory; chunking
+        never changes results.
+      weight_tables: optional per-(unit, device) pre-corrupted weight
+        tables (``repro.models.cnn.build_weight_fault_tables``).  When
+        given, ``apply_fn`` must accept ``weight_rates=None`` and skip
+        weight corruption (the gathered weights are already corrupted).
     """
 
     def __init__(self, apply_fn, params, x: jax.Array, labels: jax.Array,
                  spec: FaultSpec, device_fault_scale: np.ndarray,
-                 base_seed: int = 0):
+                 base_seed: int = 0, eval_batch_size: int | None = None,
+                 weight_tables: list | None = None):
         self.spec = spec
-        self.device_fault_scale = np.asarray(device_fault_scale, np.float32)
         self.base_seed = base_seed
         self.labels = labels
-        self._cache: dict[tuple, float] = {}
+        self.weight_tables = weight_tables
+        self._acc_batch_tables = None
+        # property setter: derives the per-device rate arrays
+        self.device_fault_scale = device_fault_scale
 
-        @jax.jit
-        def _acc(weight_rates, act_rates, seed):
+        def _acc_row(weight_rates, act_rates, seed):
             logits = apply_fn(params, x, weight_rates, act_rates, seed)
             pred = jnp.argmax(logits, axis=-1)
             return jnp.mean((pred == labels).astype(jnp.float32))
 
-        self._acc = _acc
-        self._clean: float | None = None  # computed lazily (needs n_layers)
+        self._acc = jax.jit(_acc_row)          # single-row (clean + loop ref)
+
+        @jax.jit
+        def _acc_batch(WR, AR, seed):
+            return jax.vmap(lambda wr, ar: _acc_row(wr, ar, seed))(WR, AR)
+
+        self._acc_batch = _acc_batch
+
+        if weight_tables is not None:
+            n_units = len(weight_tables)
+            a_dev = jnp.asarray(self.a_rates_by_device)
+
+            def _acc_row_tables(p_row, seed):
+                gathered = [jax.tree.map(lambda t: t[p_row[i]],
+                                         weight_tables[i])
+                            for i in range(n_units)]
+                logits = apply_fn(gathered, x, None, a_dev[p_row], seed)
+                pred = jnp.argmax(logits, axis=-1)
+                return jnp.mean((pred == labels).astype(jnp.float32))
+
+            @jax.jit
+            def _acc_batch_tables(P_dev, seed):
+                return jax.vmap(lambda p: _acc_row_tables(p, seed))(P_dev)
+
+            self._acc_batch_tables = _acc_batch_tables
+
+        self._engine = PopulationEvalEngine(self._dispatch, eval_batch_size)
+        self._cache = self._engine._cache      # chromosome -> faulty accuracy
+        self._clean: float | None = None       # computed lazily (needs n_layers)
+
+    @property
+    def device_fault_scale(self) -> np.ndarray:
+        return self._device_fault_scale
+
+    @device_fault_scale.setter
+    def device_fault_scale(self, value):
+        """Refresh the evaluator's view of the fault environment.
+
+        The online reconfigurator (runtime.py) assigns this when the
+        observed environment shifts: the per-device rate arrays are
+        re-derived (indexing after the multiply stays bitwise-identical
+        to the historical ``rate * scale[P]``), the chromosome cache is
+        invalidated, and any pre-corrupted weight tables are dropped —
+        they encode the OLD rates — falling back to the generic vmap
+        path (rebuild tables via ``build_weight_fault_tables`` to get
+        the fast path back).
+        """
+        value = np.asarray(value, np.float32)
+        changed = (getattr(self, "_device_fault_scale", None) is not None
+                   and not np.array_equal(self._device_fault_scale, value))
+        self._device_fault_scale = value
+        self.w_rates_by_device = np.asarray(
+            self.spec.weight_fault_rate * value, np.float32)
+        self.a_rates_by_device = np.asarray(
+            self.spec.act_fault_rate * value, np.float32)
+        if changed:
+            if getattr(self, "_engine", None) is not None:
+                self._engine._cache.clear()
+            self.weight_tables = None
+            self._acc_batch_tables = None
+
+    @property
+    def eval_batch_size(self) -> int | None:
+        return self._engine.eval_batch_size
+
+    @eval_batch_size.setter
+    def eval_batch_size(self, value: int | None):
+        self._engine.eval_batch_size = value
+
+    @property
+    def dispatches(self) -> int:
+        """Jitted batch dispatches issued so far (cache hits cost zero)."""
+        return self._engine.dispatches
+
+    def _dispatch(self, rows: np.ndarray) -> np.ndarray:
+        """One jitted dispatch: [U, L] device rows -> [U] faulty accuracy."""
+        seed = jnp.int32(self.base_seed)
+        if self._acc_batch_tables is not None:
+            return np.asarray(
+                self._acc_batch_tables(jnp.asarray(rows, jnp.int32), seed))
+        WR = jnp.asarray(self.w_rates_by_device[rows], jnp.float32)
+        AR = jnp.asarray(self.a_rates_by_device[rows], jnp.float32)
+        return np.asarray(self._acc_batch(WR, AR, seed))
 
     def clean_accuracy(self, n_layers: int) -> float:
         if self._clean is None:
@@ -70,20 +187,16 @@ class InferenceAccuracyEvaluator:
         return self._clean
 
     def delta_acc(self, P: np.ndarray) -> np.ndarray:
-        """P: [N, L] -> ΔAcc per candidate (cached by chromosome)."""
-        N, L = P.shape
-        out = np.zeros(N)
-        clean = self.clean_accuracy(L)
-        for i in range(N):
-            key = tuple(int(v) for v in P[i])
-            if key not in self._cache:
-                scale = self.device_fault_scale[P[i]]
-                wr = jnp.asarray(self.spec.weight_fault_rate * scale, jnp.float32)
-                ar = jnp.asarray(self.spec.act_fault_rate * scale, jnp.float32)
-                faulty = float(self._acc(wr, ar, jnp.int32(self.base_seed)))
-                self._cache[key] = max(0.0, clean - faulty)
-            out[i] = self._cache[key]
-        return out
+        """P: [N, L] device ids -> ΔAcc per candidate.
+
+        Deduplicates the population, evaluates only unique uncached
+        chromosomes (one vmapped dispatch per ``eval_batch_size`` chunk)
+        and scatters results back through the cache.
+        """
+        P = np.asarray(P)
+        clean = self.clean_accuracy(P.shape[1])
+        faulty = self._engine.evaluate(P)
+        return np.maximum(0.0, clean - faulty)
 
 
 class SurrogateAccuracyEvaluator:
@@ -116,12 +229,32 @@ class SurrogateAccuracyEvaluator:
 
 @dataclasses.dataclass
 class ObjectiveFn:
-    """Assembles the [N,3] (or [N,2] for fault-unaware) objective matrix."""
+    """Assembles the [N,3] (or [N,2] for fault-unaware) objective matrix.
+
+    This is the ``eval_fn`` handed to :func:`repro.core.nsga2.nsga2`:
+    it receives the full ``[N, L]`` population once per generation and
+    returns ``[N, M]`` in a single call, so the ΔAcc evaluator can batch
+    every unique chromosome into one device dispatch.  Set
+    ``eval_batch_size`` to cap chromosomes per dispatch; dispatch count
+    stays O(generations), never O(generations × population).
+
+    ``eval_batch_size`` semantics: a non-None value OVERRIDES the
+    evaluator's own chunk size at construction time (the evaluator is
+    mutated — don't share one evaluator between ObjectiveFns that want
+    different chunking); None means "leave the evaluator's setting
+    alone", not "force full-batch".
+    """
 
     cost_model: CostModel
     acc_evaluator: object | None          # None => fault-unaware baseline
     latency_weight: float = 1.0
     energy_weight: float = 1.0
+    eval_batch_size: int | None = None
+
+    def __post_init__(self):
+        if (self.eval_batch_size is not None
+                and hasattr(self.acc_evaluator, "eval_batch_size")):
+            self.acc_evaluator.eval_batch_size = self.eval_batch_size
 
     @property
     def n_objectives(self) -> int:
@@ -141,6 +274,7 @@ class ObjectiveFn:
 
 def profile_layer_sensitivity(apply_fn, params, x, labels, n_layers: int,
                               spec: FaultSpec, base_seed: int = 0,
+                              eval_batch_size: int | None = None,
                               ) -> np.ndarray:
     """Paper Sec. V-C strategy 1: layer-wise fault sweeping.
 
@@ -148,20 +282,31 @@ def profile_layer_sensitivity(apply_fn, params, x, labels, n_layers: int,
     spec's base rates) and records the Top-1 drop.  The resulting vector
     seeds ``LayerInfo.sensitivity`` for the surrogate evaluator and is
     itself a deliverable (which layers are fragile).
+
+    The clean row plus the L one-hot rows form one ``[L+1, L]`` batch
+    evaluated in a single vmapped dispatch (chunked by
+    ``eval_batch_size`` if set) instead of an L-iteration loop.
     """
 
     @jax.jit
-    def _acc(weight_rates, act_rates, seed):
-        logits = apply_fn(params, x, weight_rates, act_rates, seed)
-        pred = jnp.argmax(logits, axis=-1)
-        return jnp.mean((pred == labels).astype(jnp.float32))
+    def _acc_batch(WR, AR, seed):
+        def row(wr, ar):
+            logits = apply_fn(params, x, wr, ar, seed)
+            pred = jnp.argmax(logits, axis=-1)
+            return jnp.mean((pred == labels).astype(jnp.float32))
+        return jax.vmap(row)(WR, AR)
 
-    zero = jnp.zeros((n_layers,), jnp.float32)
-    clean = float(_acc(zero, zero, jnp.int32(base_seed)))
-    sens = np.zeros(n_layers)
-    for l in range(n_layers):
-        wr = zero.at[l].set(spec.weight_fault_rate)
-        ar = zero.at[l].set(spec.act_fault_rate)
-        faulty = float(_acc(wr, ar, jnp.int32(base_seed)))
-        sens[l] = max(0.0, clean - faulty)
-    return sens
+    # row 0 = clean; row 1+l = faults on layer l only
+    WR = np.zeros((n_layers + 1, n_layers), np.float32)
+    AR = np.zeros((n_layers + 1, n_layers), np.float32)
+    WR[1:][np.diag_indices(n_layers)] = np.float32(spec.weight_fault_rate)
+    AR[1:][np.diag_indices(n_layers)] = np.float32(spec.act_fault_rate)
+
+    accs = np.empty(n_layers + 1)
+    seed = jnp.int32(base_seed)
+    for start, stop, padded in chunked_rows(n_layers + 1, eval_batch_size):
+        wr = pad_rows(WR[start:stop], padded)
+        ar = pad_rows(AR[start:stop], padded)
+        vals = np.asarray(_acc_batch(jnp.asarray(wr), jnp.asarray(ar), seed))
+        accs[start:stop] = vals[:stop - start]
+    return np.maximum(0.0, accs[0] - accs[1:])

@@ -57,6 +57,8 @@ def _compile_cell(cfg, shape, mesh, multi_pod, overrides, unroll):
         lowered = fn.lower(*args)
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jaxlib: list of per-program dicts
+        cost = cost[0] if cost else {}
     return compiled, cost
 
 

@@ -88,21 +88,70 @@ FAULTY_BITS = 4
 
 
 def _corrupt_unit(p, x, wr, ar, seed):
-    """Apply the paper's fault model to one unit's weights + input acts."""
+    """Apply the paper's fault model to one unit's weights + input acts.
+
+    ``wr`` / ``ar`` may independently be None: weight corruption is
+    skipped when ``wr`` is None (e.g. weights were pre-corrupted via
+    :func:`build_weight_fault_tables`), activation corruption when
+    ``ar`` is None.  Both None => fault machinery absent from the jaxpr.
+    """
     if wr is not None:
         p = jax.tree.map(
             lambda w: maybe_corrupt(w, wr, seed, bits=FAULT_BITS,
                                     faulty_bits=FAULTY_BITS)
             if w.ndim > 1 else w, p)
+    if ar is not None:
         x = maybe_corrupt(x, ar, seed + 1, bits=FAULT_BITS,
                           faulty_bits=FAULTY_BITS)
     return p, x
 
 
 def _rates(w_rates, a_rates, seed, i):
-    if w_rates is None:
+    if w_rates is None and a_rates is None:
         return None, None, None
-    return w_rates[i], a_rates[i], seed + 7919 * i
+    return (None if w_rates is None else w_rates[i],
+            None if a_rates is None else a_rates[i],
+            seed + 7919 * i)
+
+
+def build_weight_fault_tables(params, w_rates_by_device, base_seed: int = 0):
+    """Pre-corrupt every unit's weights once per (unit, device).
+
+    With a fixed fault seed, the corrupted weights of unit ``i`` depend
+    only on its effective rate — and rates factor as
+    ``base_rate * device_fault_scale[P_i]``, i.e. one of D values.  So
+    the O(params · faulty_bits) PRNG hashing can be hoisted out of the
+    per-candidate NSGA-II loop entirely: corrupt once per (unit, device),
+    then *gather* by device id per candidate.
+
+    Args:
+      params: list of per-unit param trees (the CNN models' layout).
+      w_rates_by_device: [D] effective weight fault rates (float32,
+        exactly the values the inline path would trace — bit-identical
+        corruption).
+      base_seed: same base seed the evaluator passes to ``apply``.
+
+    Returns a list (per unit) of param trees whose leaves are stacked
+    ``[D, ...]``; index leaf[d] to get the unit's weights as corrupted
+    on device d.  Uncorrupted leaves (biases) are replicated.  Matches
+    ``_corrupt_unit`` exactly: ndim>1 leaves only, unit seed
+    ``base_seed + 7919 * i``.
+    """
+    rates = [jnp.float32(r) for r in np.asarray(w_rates_by_device)]
+
+    @jax.jit
+    def _build():
+        tables = []
+        for i, unit in enumerate(params):
+            variants = [jax.tree.map(
+                lambda w: maybe_corrupt(w, r, base_seed + 7919 * i,
+                                        bits=FAULT_BITS,
+                                        faulty_bits=FAULTY_BITS)
+                if w.ndim > 1 else w, unit) for r in rates]
+            tables.append(jax.tree.map(lambda *vs: jnp.stack(vs), *variants))
+        return tables
+
+    return jax.block_until_ready(_build())
 
 
 # ==========================================================================

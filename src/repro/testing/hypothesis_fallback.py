@@ -1,0 +1,105 @@
+"""Minimal drop-in for the ``hypothesis`` API surface this repo uses.
+
+Some CI / hermetic environments ship only the pinned runtime deps and
+no ``hypothesis``; without this fallback the property-test modules fail
+at *collection* (``ModuleNotFoundError``), silently zeroing their
+coverage.  ``tests/conftest.py`` installs this module into
+``sys.modules["hypothesis"]`` when the real package is missing, so
+``from hypothesis import given, settings, strategies as st`` keeps
+working and the property tests still run — with deterministic
+pseudo-random sampling instead of hypothesis's guided search and
+shrinking.
+
+Covered API: ``given``, ``settings(max_examples=, deadline=)``, and the
+strategies ``integers``, ``floats``, ``sampled_from``.  Anything else
+raises immediately so a new hypothesis feature can't silently become a
+no-op here — extend this module (or add hypothesis to the environment)
+when that happens.
+
+Sampling is seeded from the test's qualified name, so failures
+reproduce run-to-run.  The first example of each strategy is its
+boundary value (min for integers/floats, first element for
+sampled_from), mimicking hypothesis's preference for edge cases.
+"""
+from __future__ import annotations
+
+
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "IS_FALLBACK"]
+
+IS_FALLBACK = True
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw, boundary):
+        self._draw = draw
+        self._boundary = boundary
+
+    def example_for(self, rng, index):
+        if index == 0:
+            return self._boundary
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                     int(min_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                     float(min_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     elements[0])
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the function; works above or below @given."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    if kw_strats:
+        raise NotImplementedError(
+            "hypothesis_fallback: keyword strategies not supported")
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", None) \
+                or getattr(fn, "_fallback_max_examples",
+                           _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(n):
+                drawn = tuple(s.example_for(rng, i) for s in strats)
+                fn(*drawn)
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would try to resolve the strategy parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def __getattr__(name):
+    raise AttributeError(
+        f"hypothesis_fallback implements only given/settings/strategies; "
+        f"{name!r} needs the real hypothesis package (pip install hypothesis)")

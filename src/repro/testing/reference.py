@@ -1,0 +1,26 @@
+"""Reference implementations kept for benchmarking and bit-exactness tests.
+
+``loop_delta_acc`` is the repo's pre-engine ΔAcc path — one jitted
+dispatch plus a host sync per individual, no population batching.  The
+batched engine must stay bit-identical to it (tests/test_eval_engine.py)
+and measurably faster (benchmarks/eval_engine.py); both consume this
+single copy so the baseline cannot drift between them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def loop_delta_acc(ev, P: np.ndarray) -> np.ndarray:
+    """Historical per-individual delta_acc: ev is an
+    InferenceAccuracyEvaluator, P an [N, L] device-id matrix."""
+    import jax.numpy as jnp
+    P = np.asarray(P)
+    clean = ev.clean_accuracy(P.shape[1])
+    out = np.empty(len(P))
+    for i, row in enumerate(P):
+        wr = jnp.asarray(ev.w_rates_by_device[row], jnp.float32)
+        ar = jnp.asarray(ev.a_rates_by_device[row], jnp.float32)
+        out[i] = max(0.0, clean - float(
+            ev._acc(wr, ar, jnp.int32(ev.base_seed))))
+    return out

@@ -1,6 +1,23 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
 single CPU device; only launch/dryrun.py forces 512 placeholder devices.
+
+Also installs ``repro.testing.hypothesis_fallback`` as ``hypothesis``
+when the real package is absent, so the property-test modules collect
+and run everywhere (see that module's docstring).
 """
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_fallback
+    sys.modules["hypothesis"] = hypothesis_fallback
+
 import numpy as np
 import pytest
 

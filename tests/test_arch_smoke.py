@@ -44,6 +44,7 @@ def test_forward_smoke(arch):
     assert bool(jnp.isfinite(logits).all()), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch).reduced()
