@@ -99,8 +99,15 @@ def eval_batch(n=512, seed=99):
 
 def make_evaluator(name: str, params, fault_spec: FaultSpec,
                    n_eval=512, eval_batch_size=None,
-                   use_weight_tables=True) -> InferenceAccuracyEvaluator:
+                   use_weight_tables=True,
+                   eval_strategy="staged") -> InferenceAccuracyEvaluator:
     """Population-batched ΔAcc evaluator for one of the paper's CNNs.
+
+    The default CNN path is the *staged* prefix-reuse engine (the models
+    expose the per-unit ``step`` API): per-generation cost scales with
+    unique gene prefixes instead of ``unique_rows x L`` unit runs.
+    ``eval_strategy="full"`` selects the whole-forward batched path —
+    bit-identical, only cost differs.
 
     ``use_weight_tables`` pre-corrupts weights per (unit, device) so the
     NSGA-II hot loop only gathers them (bit-identical, much faster);
@@ -108,8 +115,10 @@ def make_evaluator(name: str, params, fault_spec: FaultSpec,
     None it is auto-derived: small calibration batches are dispatch-bound
     and want the whole population in one vmapped call, while paper-scale
     512-sample batches are compute-bound (and memory-heavy — activations
-    scale with rows × images), where narrow chunks win.  Chunking never
-    changes results, only dispatch count.
+    scale with rows × images), where narrow chunks win.  ``"auto"``
+    probes the compiled executable's memory footprint instead (see
+    ``core.eval_engine.auto_eval_batch_size``).  Chunking never changes
+    results, only dispatch count.
     """
     from repro.models.cnn import build_weight_fault_tables
     model = CNN_MODELS[name]
@@ -130,7 +139,9 @@ def make_evaluator(name: str, params, fault_spec: FaultSpec,
     return InferenceAccuracyEvaluator(apply_fn, params, x, y, fault_spec,
                                       DEVICE_FAULT_SCALE,
                                       eval_batch_size=eval_batch_size,
-                                      weight_tables=tables)
+                                      weight_tables=tables,
+                                      step_fn=model.step,
+                                      eval_strategy=eval_strategy)
 
 
 def accuracy_under_partition(name: str, params, partition: np.ndarray,

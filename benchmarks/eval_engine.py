@@ -9,14 +9,27 @@ lines 5-7) on one population of unique chromosomes:
                individual (what ``delta_acc`` did before the engine);
   batched    — one ``jit(vmap)`` dispatch over the whole population
                (generic per-layer rate vectors);
-  batched+tables — the engine's default for the CNN models: weight
-               corruption pre-computed per (layer, device) and gathered
-               per candidate, so the per-candidate PRNG hashing is
+  batched+tables — the PR-1 full-forward path: weight corruption
+               pre-computed per (layer, device) and gathered per
+               candidate, so the per-candidate PRNG hashing is
                amortised away entirely (bit-identical; see
-               models/cnn.build_weight_fault_tables).
+               models/cnn.build_weight_fault_tables);
+  staged     — the prefix-reuse engine (PrefixEvalEngine): the model is
+               walked unit by unit and each unique gene *prefix* is
+               evaluated once, so per-generation cost scales with
+               unique prefixes instead of unique_rows x L unit runs.
 
-All three produce bit-identical ΔAcc vectors (asserted here and locked
-in by tests/test_eval_engine.py); only the latency differs.
+All paths produce bit-identical ΔAcc vectors (asserted here and locked
+in by tests/test_eval_engine.py + tests/test_staged_eval.py); only the
+latency differs.
+
+A generational scenario (``run_generational``) replays the exact
+population sequence of a converging NSGA-II search — where prefix
+sharing emerges — through the PR-1 full-forward path and the staged
+engine, reporting per-candidate latency, unit-runs-avoided and prefix
+hit rate to results/bench/prefix_reuse.json.  With ``--smoke`` this
+doubles as the CI regression guard: the run FAILS if the staged path
+executes more unit runs than the full path would.
 
 The default configuration is the *dispatch-bound* regime — a small
 calibration batch, the regime an edge-accelerator deployment sees where
@@ -71,10 +84,12 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
     def apply_fn(p, xx, wr, ar, s):
         return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=s)
 
-    def fresh(weight_tables=None):
+    def fresh(weight_tables=None, staged=False):
         return InferenceAccuracyEvaluator(
             apply_fn, params, x, labels, spec, scale,
-            eval_batch_size=eval_batch_size, weight_tables=weight_tables)
+            eval_batch_size=eval_batch_size, weight_tables=weight_tables,
+            step_fn=model.step if staged else None,
+            eval_strategy="staged" if staged else "full")
 
     # unique chromosomes only: no dedup/cache help for any path, so the
     # headline number isolates the engine itself
@@ -95,6 +110,7 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
     ev_loop = fresh()
     ev_vmap = fresh()
     ev_tab = fresh(weight_tables=tables)
+    ev_st = fresh(weight_tables=tables, staged=True)
 
     from repro.testing.reference import loop_delta_acc as loop_path
 
@@ -112,6 +128,7 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
     loop_path(ev_loop, P[:1])
     ev_vmap.delta_acc(P)
     ev_tab.delta_acc(P)
+    ev_st.delta_acc(P)
 
     t_loop, v_loop = timeit(lambda: loop_path(ev_loop, P), lambda: None)
     d0 = ev_vmap.dispatches
@@ -122,9 +139,15 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
     t_tab, v_tab = timeit(lambda: ev_tab.delta_acc(P),
                           lambda: ev_tab._cache.clear())
     tab_dispatches = (ev_tab.dispatches - d0) // reps
+    # clearing the staged engine drops BOTH the row cache and the
+    # activation store, so each rep recomputes every prefix honestly
+    t_st, v_st = timeit(lambda: ev_st.delta_acc(P),
+                        lambda: ev_st._prefix_engine.clear())
+    staged_stats = ev_st.staged_stats()
 
-    assert (v_loop == v_vmap).all() and (v_loop == v_tab).all(), \
-        "batched paths must be bit-identical to the loop"
+    assert (v_loop == v_vmap).all() and (v_loop == v_tab).all() \
+        and (v_loop == v_st).all(), \
+        "batched/staged paths must be bit-identical to the loop"
 
     # scenario 2: realistic converging population (duplicates + warm cache)
     P_dup = np.repeat(P[:max(1, pop // 6)], 6, axis=0)[:pop]
@@ -144,16 +167,139 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
             "loop": t_loop / pop * 1e3,
             "batched": t_vmap / pop * 1e3,
             "batched_tables": t_tab / pop * 1e3,
+            "staged": t_st / pop * 1e3,
             "cached_population": t_cached / pop * 1e3,
         },
         "speedup_vs_loop": {
             "batched": t_loop / t_vmap,
             "batched_tables": t_loop / t_tab,
+            "staged": t_loop / t_st,
         },
         "dispatches": {"loop": pop, "batched": vmap_dispatches,
                        "batched_tables": tab_dispatches,
                        "cached_population": cached_dispatches},
+        "staged": staged_stats,
         "table_build_s": table_build_s,
+    }
+    return rec
+
+
+def run_generational(model_name: str = "alexnet", pop: int = 60,
+                     gens: int = 20, n_eval: int = 64, width: float = 0.125,
+                     img: int = 16, seed: int = 0,
+                     eval_batch_size: int | None = None) -> dict:
+    """Staged vs full-forward over a real converging population sequence.
+
+    Prefix reuse only pays off where gene prefixes actually repeat —
+    i.e. in the NSGA-II populations of a running search, not in i.i.d.
+    random chromosomes.  This scenario traces the exact evaluation
+    requests of a ``pop x gens`` NSGA-II run (selection driven by the
+    calibrated-surrogate objective: cheap, deterministic, and converging
+    like the real search), then replays that request stream through
+
+      * the PR-1 full-forward batched+tables path, and
+      * the staged PrefixEvalEngine (same weight tables),
+
+    asserting bit-identical ΔAcc per generation and timing only the
+    replay.  Both evaluators are warmed first (compiles excluded), then
+    their caches/stores are dropped so every activation is recomputed
+    honestly inside the timed region.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (CostModel, FaultSpec, InferenceAccuracyEvaluator,
+                            NSGA2Config, nsga2)
+    from repro.core.costmodel import PAPER_DEVICES
+    from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
+    from repro.models.cnn import CNN_MODELS, build_weight_fault_tables
+
+    model = CNN_MODELS[model_name]
+    L = model.n_units
+    scale = np.array([d.fault_scale for d in PAPER_DEVICES])
+    spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2)
+    rng = np.random.default_rng(seed)
+
+    # ---- trace the population sequence a real search evaluates ----------
+    layers = model.layer_infos(num_classes=16, width=width, img=img)
+    cm = CostModel(layers, PAPER_DEVICES)
+    obj = ObjectiveFn(cm, SurrogateAccuracyEvaluator(cm))
+    trace: list[np.ndarray] = []
+
+    def recording(P):
+        trace.append(np.asarray(P).copy())
+        return obj(P)
+
+    nsga2(recording, n_genes=L, n_devices=len(PAPER_DEVICES),
+          config=NSGA2Config(population=pop, generations=gens, seed=seed),
+          violation_fn=obj.violation)
+
+    # ---- evaluators (both on the PR-1 weight-table fast path) ------------
+    params = model.init(jax.random.PRNGKey(0), num_classes=16, width=width,
+                        img=img)
+    x = jnp.asarray(rng.normal(size=(n_eval, img, img, 3)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 16, size=(n_eval,)))
+    w_rates = np.asarray(spec.weight_fault_rate
+                         * np.asarray(scale, np.float32), np.float32)
+    tables = build_weight_fault_tables(params, w_rates, base_seed=0)
+
+    def apply_fn(p, xx, wr, ar, s):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=s)
+
+    def fresh(staged):
+        return InferenceAccuracyEvaluator(
+            apply_fn, params, x, labels, spec, scale,
+            eval_batch_size=eval_batch_size, weight_tables=tables,
+            step_fn=model.step if staged else None,
+            eval_strategy="staged" if staged else "full")
+
+    def replay(ev, clear, stats_fn):
+        for P in trace:             # warm-up: compile every bucket shape
+            ev.delta_acc(P)
+        clear()
+        before = dict(stats_fn())
+        vals = []
+        t0 = time.perf_counter()
+        for P in trace:
+            vals.append(ev.delta_acc(P))
+        dt = time.perf_counter() - t0
+        stats = {k: v - before[k] if isinstance(v, int) else v
+                 for k, v in stats_fn().items()}
+        return dt, vals, stats
+
+    ev_full = fresh(staged=False)
+    t_full, v_full, full_stats = replay(
+        ev_full, ev_full._cache.clear,
+        lambda: {"rows_evaluated": ev_full._engine.rows_evaluated,
+                 "dispatches": ev_full._engine.dispatches})
+    full_rows = full_stats["rows_evaluated"]
+    ev_st = fresh(staged=True)
+    t_st, v_st, st = replay(ev_st, ev_st._prefix_engine.clear,
+                            ev_st.staged_stats)
+    for g, (a, b) in enumerate(zip(v_full, v_st)):
+        assert (a == b).all(), f"staged != full at generation {g}"
+    # the timed pass's own hit rate (counter deltas, not lifetime)
+    needed = st["unit_runs"] - st["recomputes"] + st["prefix_hits"]
+    st["prefix_hit_rate"] = st["prefix_hits"] / max(needed, 1)
+    candidates = pop * (gens + 1)       # initial population + children/gen
+    rec = {
+        "config": {"model": model_name, "pop": pop, "generations": gens,
+                   "n_eval": n_eval, "width": width, "img": img,
+                   "eval_batch_size": eval_batch_size, "seed": seed,
+                   "n_devices": len(scale)},
+        "candidates": candidates,
+        "unique_rows": full_rows,
+        "per_candidate_ms": {
+            "full": t_full / candidates * 1e3,
+            "staged": t_st / candidates * 1e3,
+        },
+        "staged_speedup_vs_full": t_full / t_st,
+        "unit_runs": {
+            "full": full_rows * L,
+            "staged": st["unit_runs"],
+            "avoided": st["full_unit_runs"] - st["unit_runs"],
+        },
+        "prefix_hit_rate": st["prefix_hit_rate"],
+        "staged_stats": st,
     }
     return rec
 
@@ -169,18 +315,30 @@ def main():
     ap.add_argument("--width", type=float, default=0.125)
     ap.add_argument("--img", type=int, default=16)
     ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--eval-batch-size", type=int, default=None,
-                    help="cap chromosomes per dispatch (memory knob)")
+    ap.add_argument("--eval-batch-size", default=None,
+                    help="cap chromosomes per dispatch (int, or 'auto' to "
+                         "probe the compiled memory footprint)")
+    ap.add_argument("--generations", type=int, default=20,
+                    help="NSGA-II generations for the prefix-reuse replay")
+    ap.add_argument("--gen-n-eval", type=int, default=64,
+                    help="calibration batch for the generational scenario "
+                         "(compute-bound regime where unit runs dominate)")
+    ap.add_argument("--skip-generational", action="store_true",
+                    help="only run the single-population microbenchmark")
     ap.add_argument("--paper", action="store_true",
                     help="paper-scale eval batch (512 samples, width .5, "
                          "img 32): compute-bound regime")
     ap.add_argument("--smoke", action="store_true",
-                    help="two reps (CI artifact run)")
+                    help="two reps + regression guard (CI artifact run): "
+                         "fails if the staged path runs more unit runs "
+                         "than the full path")
     args = ap.parse_args()
+    from repro.core.eval_engine import parse_eval_batch_size
+    ebs = parse_eval_batch_size(args.eval_batch_size)
 
     kw = dict(model_name=args.model, pop=args.pop, n_eval=args.n_eval,
               width=args.width, img=args.img, reps=args.reps,
-              eval_batch_size=args.eval_batch_size)
+              eval_batch_size=ebs)
     if args.paper:
         # only fill in values the user left at their defaults
         paper = {"n_eval": 512, "width": 0.5, "img": 32}
@@ -200,6 +358,10 @@ def main():
     print(f"eval_engine.batched_tables,{ms['batched_tables']*1e3:.0f},"
           f"speedup={sp['batched_tables']:.2f}x "
           f"dispatches={rec['dispatches']['batched_tables']}")
+    print(f"eval_engine.staged,{ms['staged']*1e3:.0f},"
+          f"speedup={sp['staged']:.2f}x "
+          f"unit_runs={rec['staged']['unit_runs']}/"
+          f"{rec['staged']['full_unit_runs']}")
     print(f"eval_engine.cached_population,{ms['cached_population']*1e3:.0f},"
           f"dispatches={rec['dispatches']['cached_population']}")
     os.makedirs(RESULTS, exist_ok=True)
@@ -207,6 +369,32 @@ def main():
     with open(out, "w") as f:
         json.dump(rec, f, indent=1, default=float)
     print(f"# wrote {out}")
+
+    if args.skip_generational:
+        return rec
+
+    gen = run_generational(model_name=args.model, pop=args.pop,
+                           gens=args.generations, n_eval=args.gen_n_eval,
+                           width=args.width, img=args.img,
+                           eval_batch_size=ebs)
+    ur = gen["unit_runs"]
+    print(f"eval_engine.generational_full,"
+          f"{gen['per_candidate_ms']['full']*1e3:.0f},"
+          f"unit_runs={ur['full']}")
+    print(f"eval_engine.generational_staged,"
+          f"{gen['per_candidate_ms']['staged']*1e3:.0f},"
+          f"speedup={gen['staged_speedup_vs_full']:.2f}x "
+          f"unit_runs={ur['staged']} avoided={ur['avoided']} "
+          f"hit_rate={gen['prefix_hit_rate']:.2f}")
+    out = os.path.join(RESULTS, "prefix_reuse.json")
+    with open(out, "w") as f:
+        json.dump(gen, f, indent=1, default=float)
+    print(f"# wrote {out}")
+
+    if args.smoke and ur["staged"] > ur["full"]:
+        print(f"FAIL: staged path ran {ur['staged']} unit runs, more than "
+              f"the full path's {ur['full']} — prefix reuse regressed")
+        sys.exit(1)
     return rec
 
 

@@ -103,6 +103,7 @@ def run_eval_engine(model: str, pop: int, eval_batch_size: int | None):
     print(f"eval-engine {model} pop={pop} ebs={eval_batch_size}: "
           f"loop={ms['loop']:.3f}ms/cand "
           f"batched={ms['batched']:.3f} tables={ms['batched_tables']:.3f} "
+          f"staged={ms['staged']:.3f} "
           f"speedup={rec['speedup_vs_loop']['batched_tables']:.2f}x")
     return rec
 
@@ -120,8 +121,11 @@ def main():
                     help="eval-engine target: CNN to evaluate")
     ap.add_argument("--pop", type=int, default=60,
                     help="eval-engine target: population size")
-    ap.add_argument("--eval-batch-size", type=int, default=None,
-                    help="eval-engine target: chromosomes per dispatch")
+    from repro.core.eval_engine import parse_eval_batch_size
+    ap.add_argument("--eval-batch-size", default=None,
+                    type=parse_eval_batch_size,
+                    help="eval-engine target: chromosomes per dispatch "
+                         "(int, or 'auto' to probe the compiled footprint)")
     args = ap.parse_args()
     if args.target == "eval-engine":
         run_eval_engine(args.model, args.pop, args.eval_batch_size)

@@ -9,6 +9,14 @@ for EXPERIMENTS.md.
   bench_table2  — Table II: acc/lat/energy, 3 fault scenarios x 3 tools
   bench_kernels — fault-injection kernel path vs pure-jnp oracle
   bench_nsga2   — partitioner throughput (evaluations/sec, convergence)
+  bench_surrogate — one-command surrogate pipeline: batched layer-wise
+                  sensitivity profiling -> calibrated surrogate ->
+                  full NSGA-II search + fidelity check
+                  (``--surrogate [model]`` runs only this)
+
+Flags: ``--paper`` (paper-scale pop/gens), ``--eval-batch-size N|auto``
+(chromosomes per ΔAcc dispatch), ``--eval-strategy staged|full`` (ΔAcc
+execution path; staged prefix-reuse is the CNN default).
 """
 from __future__ import annotations
 
@@ -29,20 +37,32 @@ POP, GEN = (30, 25) if QUICK else (60, 60)
 FAULT_RATE = 0.2
 
 
-def _int_flag(name: str, default=None):
+def _flag(name: str, default=None, cast=str):
     for i, arg in enumerate(sys.argv):
         if arg == name:
             if i + 1 >= len(sys.argv):
-                sys.exit(f"{name} requires an integer value")
-            return int(sys.argv[i + 1])
+                sys.exit(f"{name} requires a value")
+            return cast(sys.argv[i + 1])
         if arg.startswith(name + "="):
-            return int(arg.split("=", 1)[1])
+            return cast(arg.split("=", 1)[1])
     return default
 
 
-# cap chromosomes per ΔAcc device dispatch (memory knob; results
-# unchanged — see src/repro/core/eval_engine.py)
-EVAL_BATCH = _int_flag("--eval-batch-size")
+def _int_flag(name: str, default=None):
+    return _flag(name, default, cast=int)
+
+
+def _ebs_flag(default=None):
+    from repro.core.eval_engine import parse_eval_batch_size
+    return parse_eval_batch_size(_flag("--eval-batch-size", default))
+
+
+# cap chromosomes per ΔAcc device dispatch (memory knob, "auto" probes
+# the compiled footprint; results unchanged — see core/eval_engine.py)
+EVAL_BATCH = _ebs_flag()
+# ΔAcc execution path: staged prefix-reuse (CNN default) or the full
+# whole-forward batched path; bit-identical either way
+EVAL_STRATEGY = _flag("--eval-strategy", "staged")
 
 
 def _partitioners(name, params, fault_spec):
@@ -53,14 +73,18 @@ def _partitioners(name, params, fault_spec):
 
     layers = CNN_MODELS[name].layer_infos(num_classes=16, width=0.5, img=32)
     cfg = NSGA2Config(population=POP, generations=GEN, seed=0)
-    ev = make_evaluator(name, params, fault_spec, eval_batch_size=EVAL_BATCH)
+    ev = make_evaluator(name, params, fault_spec, eval_batch_size=EVAL_BATCH,
+                        eval_strategy=EVAL_STRATEGY)
+    # "auto" was already resolved (probe-compiled) inside make_evaluator;
+    # hand the resolved value on so ObjectiveFn doesn't probe again
+    ebs = ev.eval_batch_size if EVAL_BATCH == "auto" else EVAL_BATCH
     tools = {
         "CNNParted": CNNPartedLike(layers, PAPER_DEVICES, nsga2_config=cfg),
         "Flt-unaware": FaultUnawareBaseline(layers, PAPER_DEVICES,
                                             nsga2_config=cfg),
         "AFarePart": AFarePart(layers, PAPER_DEVICES, acc_evaluator=ev,
                                nsga2_config=cfg,
-                               eval_batch_size=EVAL_BATCH),
+                               eval_batch_size=ebs),
     }
     return layers, {k: v.optimize() for k, v in tools.items()}, ev
 
@@ -207,6 +231,87 @@ def bench_nsga2():
     return evs
 
 
+def bench_surrogate(name: str = "resnet18"):
+    """One-command surrogate pipeline (ROADMAP open item).
+
+    Chains the pieces that previously required manual wiring:
+
+      1. batched ``profile_layer_sensitivity`` (one vmapped sweep, the
+         module-level compile cache makes repeat runs cheap);
+      2. profiled sensitivities installed into the cost model's
+         ``LayerInfo.sensitivity``;
+      3. ``SurrogateAccuracyEvaluator.calibrate`` against a handful of
+         true fault-injected evaluations (staged CNN evaluator);
+      4. a full NSGA-II search on the calibrated surrogate;
+      5. fidelity report: surrogate vs true ΔAcc on the found front.
+
+    This is the exact recipe the transformer-scale archs use, exercised
+    end to end on a CNN where the true evaluator exists to check it.
+    """
+    import dataclasses
+
+    from benchmarks._cnn_setup import (eval_batch, get_trained,
+                                       make_evaluator)
+    from repro.core import (AFarePart, CostModel, FaultSpec, NSGA2Config,
+                            PAPER_DEVICES, profile_layer_sensitivity)
+    from repro.core.objectives import SurrogateAccuracyEvaluator
+    from repro.models.cnn import CNN_MODELS
+
+    model = CNN_MODELS[name]
+    params = get_trained(name)
+    spec = FaultSpec(weight_fault_rate=FAULT_RATE,
+                     act_fault_rate=FAULT_RATE, bits=8)
+    x, y = eval_batch(256)
+
+    # pass the model's own (stable) apply so repeat pipeline runs hit
+    # profile_layer_sensitivity's module-level compile cache — a fresh
+    # closure per call would miss it every time
+    t0 = time.time()
+    sens = profile_layer_sensitivity(model.apply, params, x, y,
+                                     model.n_units, spec)
+    profile_s = time.time() - t0
+    layers = [dataclasses.replace(li, sensitivity=float(s))
+              for li, s in zip(model.layer_infos(num_classes=16, width=0.5,
+                                                 img=32), sens)]
+
+    true_ev = make_evaluator(name, params, spec, n_eval=256,
+                             eval_batch_size=EVAL_BATCH,
+                             eval_strategy=EVAL_STRATEGY)
+    cm = CostModel(layers, PAPER_DEVICES)
+    sur = SurrogateAccuracyEvaluator(cm)
+    t0 = time.time()
+    calibration = sur.calibrate(true_ev.delta_acc, n_samples=8, seed=0)
+    calibrate_s = time.time() - t0
+
+    t0 = time.time()
+    plan = AFarePart(layers, PAPER_DEVICES, acc_evaluator=sur,
+                     nsga2_config=NSGA2Config(population=POP,
+                                              generations=GEN,
+                                              seed=0)).optimize()
+    search_s = time.time() - t0
+
+    true_front = true_ev.delta_acc(plan.front)
+    sur_front = sur.delta_acc(plan.front)
+    mae = float(np.abs(true_front - sur_front).mean())
+    rec = {
+        "model": name,
+        "sensitivity": [float(s) for s in sens],
+        "calibration": calibration,
+        "front_size": len(plan.front),
+        "front_mae": mae,
+        "true_delta_acc_front": [float(v) for v in true_front],
+        "surrogate_delta_acc_front": [float(v) for v in sur_front],
+        "selected_partition": plan.partition.tolist(),
+        "profile_s": profile_s, "calibrate_s": calibrate_s,
+        "search_s": search_s, "evaluations": plan.evaluations,
+    }
+    print(f"surrogate.{name},{search_s*1e6:.0f},"
+          f"cal={calibration:.4g} front={len(plan.front)} "
+          f"front_mae={mae:.4f} profile_s={profile_s:.1f}")
+    _dump("surrogate_pipeline", rec)
+    return rec
+
+
 def _dump(name, obj):
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
@@ -215,6 +320,17 @@ def _dump(name, obj):
 
 def main() -> None:
     print("# benchmark,us_per_call,derived")
+    if any(a == "--surrogate" or a.startswith("--surrogate=")
+           for a in sys.argv):
+        model = None
+        for i, a in enumerate(sys.argv):
+            if a.startswith("--surrogate="):
+                model = a.split("=", 1)[1]
+            elif (a == "--surrogate" and i + 1 < len(sys.argv)
+                  and not sys.argv[i + 1].startswith("-")):
+                model = sys.argv[i + 1]
+        bench_surrogate(model or "resnet18")
+        return
     bench_kernels()
     bench_nsga2()
     bench_fig3()

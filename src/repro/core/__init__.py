@@ -11,7 +11,9 @@
 from repro.core.costmodel import (CostModel, DeviceProfile, LayerInfo,
                                   EYERISS, SIMBA, TPU_V5E, TPU_V5E_LOWVOLT,
                                   PAPER_DEVICES, POD_TIERS)
-from repro.core.eval_engine import PopulationEvalEngine
+from repro.core.eval_engine import (ActivationStore, PopulationEvalEngine,
+                                    PrefixEvalEngine, auto_eval_batch_size,
+                                    device_memory_budget)
 from repro.core.fault import FaultSpec, FaultContext, PAPER_FAULT_SPEC
 from repro.core.nsga2 import NSGA2Config, nsga2, fast_non_dominated_sort
 from repro.core.objectives import (InferenceAccuracyEvaluator,
@@ -28,7 +30,8 @@ __all__ = [
     "TPU_V5E", "TPU_V5E_LOWVOLT", "PAPER_DEVICES", "POD_TIERS",
     "FaultSpec", "FaultContext", "PAPER_FAULT_SPEC",
     "NSGA2Config", "nsga2", "fast_non_dominated_sort",
-    "PopulationEvalEngine",
+    "PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
+    "auto_eval_batch_size", "device_memory_budget",
     "InferenceAccuracyEvaluator", "SurrogateAccuracyEvaluator",
     "ObjectiveFn", "profile_layer_sensitivity",
     "AFarePart", "CNNPartedLike", "FaultUnawareBaseline", "PartitionPlan",

@@ -31,12 +31,28 @@ bit-for-bit equality against the per-individual loop.
 """
 from __future__ import annotations
 
+import os
+from collections import OrderedDict
 from typing import Callable, Sequence
 
 import numpy as np
 
-__all__ = ["PopulationEvalEngine", "chunked_rows", "bucket_size",
-           "pad_rows"]
+__all__ = ["PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
+           "chunked_rows", "bucket_size", "pad_rows",
+           "auto_eval_batch_size", "device_memory_budget",
+           "peak_memory_bytes", "parse_eval_batch_size"]
+
+
+def parse_eval_batch_size(value) -> int | str | None:
+    """The one CLI/config grammar for ``eval_batch_size``: ``None`` and
+    ``"auto"`` pass through, anything else must be a positive int.
+    Shared by every benchmark CLI so the grammar cannot drift."""
+    if value in (None, "auto"):
+        return value
+    n = int(value)
+    if n < 1:
+        raise ValueError(f"eval_batch_size must be >= 1, got {n}")
+    return n
 
 
 def bucket_size(n: int) -> int:
@@ -51,16 +67,22 @@ def chunked_rows(n_rows: int, eval_batch_size: int | None
                  ) -> list[tuple[int, int, int]]:
     """Chunk plan: (start, stop, padded_size) per dispatch.
 
-    With ``eval_batch_size`` set every chunk is padded to exactly that
-    size (one static shape).  Without it the whole batch goes out in one
-    dispatch padded to the next power of two.
+    With ``eval_batch_size`` set, full chunks are padded to exactly that
+    size and a trailing partial chunk to its own power-of-two bucket —
+    at most 1 + log2(bs) static shapes total, and a small population
+    never pays for a huge configured chunk (an ``"auto"``-resolved cap
+    can be 1024 rows while a deduped population is 6).  Without it the
+    whole batch goes out in one dispatch padded to the next power of
+    two.
     """
     if n_rows <= 0:
         return []
     if eval_batch_size is None:
         return [(0, n_rows, bucket_size(n_rows))]
     bs = max(1, int(eval_batch_size))
-    return [(s, min(s + bs, n_rows), bs) for s in range(0, n_rows, bs)]
+    return [(s, min(s + bs, n_rows),
+             min(bs, bucket_size(min(s + bs, n_rows) - s)))
+            for s in range(0, n_rows, bs)]
 
 
 def pad_rows(rows: np.ndarray, padded: int) -> np.ndarray:
@@ -71,6 +93,250 @@ def pad_rows(rows: np.ndarray, padded: int) -> np.ndarray:
         return rows
     pad = np.repeat(rows[-1:], padded - len(rows), axis=0)
     return np.concatenate([rows, pad], axis=0)
+
+
+def _nbytes(a) -> int:
+    """Buffer size of a jax/numpy array without forcing a transfer."""
+    return int(np.prod(a.shape)) * a.dtype.itemsize if a.ndim else \
+        a.dtype.itemsize
+
+
+class ActivationStore:
+    """LRU-bounded ``prefix key -> activation`` store.
+
+    The staged evaluator keys an activation by the gene prefix that
+    produced it (the calibration batch, fault seed and per-device rates
+    are fixed for a search, so the prefix tuple IS the activation's full
+    provenance).  ``max_bytes`` caps resident bytes; eviction is
+    least-recently-used, skipping keys the caller has pinned for the
+    current depth.  Eviction is a *performance* event, never a
+    correctness one — the engine recomputes evicted prefixes on demand.
+    """
+
+    def __init__(self, max_bytes: int | None = None):
+        self.max_bytes = max_bytes
+        self._store: OrderedDict[tuple, object] = OrderedDict()
+        self.nbytes = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._store
+
+    def get(self, key: tuple):
+        act = self._store.get(key)
+        if act is not None:
+            self._store.move_to_end(key)
+        return act
+
+    def put(self, key: tuple, act, pinned: frozenset | set = frozenset()):
+        if key in self._store:
+            self._store.move_to_end(key)
+            return
+        self._store[key] = act
+        self.nbytes += _nbytes(act)
+        if self.max_bytes is not None:
+            self._evict(pinned)
+
+    def _evict(self, pinned):
+        for key in list(self._store):
+            if self.nbytes <= self.max_bytes:
+                return
+            if key in pinned:
+                continue
+            self.nbytes -= _nbytes(self._store.pop(key))
+            self.evictions += 1
+        # everything left is pinned: allow a transient overshoot rather
+        # than evict activations the current depth is about to read
+
+    def clear(self):
+        self._store.clear()
+        self.nbytes = 0
+
+
+class PrefixEvalEngine:
+    """Layer-wise population evaluation with gene-prefix deduplication.
+
+    The full-forward engine (:class:`PopulationEvalEngine`) evaluates
+    every unique chromosome end to end: ``unique_rows x L`` unit runs
+    per generation.  But a chromosome's corrupted activation after unit
+    *i* depends only on genes ``P[0..i]`` — and evolving populations
+    share long gene prefixes (converged NSGA-II populations especially),
+    so most of those unit runs recompute activations another chromosome
+    already produced.  This engine walks depth ``i = 0..L-1`` and at
+    each depth:
+
+      1. collects the unique prefixes ``P[:, :i+1]`` of the uncached
+         rows (population-level prefix dedup);
+      2. skips prefixes whose activation is already in the
+         :class:`ActivationStore` (cross-row and cross-generation
+         reuse);
+      3. runs unit *i* over only the *fresh* prefixes in chunked,
+         shape-bucketed ``jit(vmap)`` dispatches (one per
+         ``eval_batch_size`` chunk, padded like the full engine);
+      4. stores the new activations, LRU-evicting under ``max_bytes``.
+
+    The per-depth callable contract is
+
+        unit_fns[i](parent_acts, device_ids) -> child_acts | accs
+
+    where ``parent_acts`` is ``[U, ...]`` stacked depth ``i-1``
+    activations (ignored at depth 0 — the callable closes over the
+    calibration batch) and ``device_ids`` is ``[U]`` (the prefixes'
+    last gene).  Depths ``< L-1`` return ``[U, ...]`` activations; the
+    final depth returns the ``[U]`` per-row scalar metric, which is
+    cached exactly like the full engine caches rows.  Per-row results
+    must be independent of batch-mates (vmap semantics), so chunking
+    and padding never change values.
+
+    Cost accounting: ``unit_runs`` counts unit executions actually
+    performed (including recompute fallbacks after eviction);
+    ``rows_evaluated * n_units`` is what the full-forward path would
+    have run, so ``unit_runs_avoided`` is the engine's win.
+    """
+
+    def __init__(self, unit_fns: Sequence[Callable], n_units: int,
+                 eval_batch_size: int | None = None,
+                 max_store_bytes: int | None = None):
+        assert len(unit_fns) == n_units, (len(unit_fns), n_units)
+        self.unit_fns = unit_fns
+        self.n_units = n_units
+        self.eval_batch_size = eval_batch_size
+        self.store = ActivationStore(max_store_bytes)
+        self._cache: dict[tuple, float] = {}   # full row -> final metric
+        self.dispatches = 0        # unit_fn invocations (jit dispatches)
+        self.rows_evaluated = 0    # unique uncached rows walked
+        self.unit_runs = 0         # unit executions actually performed
+        self.prefix_hits = 0       # needed prefixes found in the store
+        self.recomputes = 0        # unit runs redone after LRU eviction
+
+    # -- derived stats -------------------------------------------------------
+    @property
+    def full_unit_runs(self) -> int:
+        """Unit runs the full-forward batched path would have performed."""
+        return self.rows_evaluated * self.n_units
+
+    @property
+    def unit_runs_avoided(self) -> int:
+        return self.full_unit_runs - self.unit_runs
+
+    def stats(self) -> dict:
+        # prefix_hits and (unit_runs - recomputes) both count UNIQUE
+        # prefixes per depth, so their sum is the unique-prefix lookups
+        # and the hit rate is the store's cross-round reuse fraction;
+        # in-round sharing shows up in unit_runs_avoided instead
+        needed = self.unit_runs - self.recomputes + self.prefix_hits
+        return {
+            "rows_evaluated": self.rows_evaluated,
+            "unit_runs": self.unit_runs,
+            "full_unit_runs": self.full_unit_runs,
+            "unit_runs_avoided": self.unit_runs_avoided,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": self.prefix_hits / max(needed, 1),
+            "recomputes": self.recomputes,
+            "evictions": self.store.evictions,
+            "dispatches": self.dispatches,
+            "store_entries": len(self.store),
+            "store_bytes": self.store.nbytes,
+        }
+
+    def clear(self):
+        """Drop cached accuracies and activations (fault env changed)."""
+        self._cache.clear()
+        self.store.clear()
+
+    # -- evaluation ----------------------------------------------------------
+    @staticmethod
+    def key(row: Sequence) -> tuple:
+        return tuple(int(v) for v in row)
+
+    def evaluate(self, P: np.ndarray) -> np.ndarray:
+        """P: [N, L] int device rows -> [N] cached final-depth values."""
+        P = np.asarray(P)
+        assert P.ndim == 2 and P.shape[1] == self.n_units, P.shape
+        keys = [self.key(row) for row in P]
+        fresh: dict[tuple, None] = {}
+        for k in keys:
+            if k not in self._cache and k not in fresh:
+                fresh[k] = None
+        if fresh:
+            self._run_rows(np.array(list(fresh), dtype=P.dtype))
+        return np.array([self._cache[k] for k in keys])
+
+    def _run_rows(self, R: np.ndarray):
+        """Walk unique uncached rows depth by depth."""
+        L = self.n_units
+        self.rows_evaluated += len(R)
+        for i in range(L):
+            last = i == L - 1
+            todo: dict[tuple, None] = {}
+            seen: set[tuple] = set()
+            for row in R:
+                p = self.key(row[:i + 1])
+                if p in seen:               # in-round sharing: counted via
+                    continue                # unit_runs_avoided, not as a hit
+                seen.add(p)
+                if not last and p in self.store:
+                    self.prefix_hits += 1   # one hit per unique prefix
+                else:
+                    todo[p] = None          # last-depth rows pre-filtered
+                                            # vs the row cache
+            if not todo:
+                continue
+            prefixes = list(todo)
+            parents = None if i == 0 else \
+                [self._ensure_act(p[:-1]) for p in prefixes]
+            devs = np.array([p[-1] for p in prefixes], np.int64)
+            outs = self._dispatch_depth(i, parents, devs, final=last)
+            if last:
+                for p, v in zip(prefixes, outs):
+                    self._cache[p] = float(v)
+            else:
+                pin = set(prefixes)
+                for p, a in zip(prefixes, outs):
+                    self.store.put(p, a, pinned=pin)
+            self.unit_runs += len(prefixes)
+
+    def _ensure_act(self, prefix: tuple):
+        """Activation for ``prefix``, recomputing the chain from the
+        nearest resident ancestor if LRU eviction dropped it (slower,
+        never wrong)."""
+        act = self.store.get(prefix)
+        if act is not None:
+            return act
+        i = len(prefix) - 1
+        parents = None if i == 0 else [self._ensure_act(prefix[:-1])]
+        devs = np.array([prefix[-1]], np.int64)
+        out = self._dispatch_depth(i, parents, devs, final=False)
+        self.unit_runs += 1
+        self.recomputes += 1
+        self.store.put(prefix, out[0], pinned={prefix})
+        return out[0]
+
+    def _dispatch_depth(self, i: int, parents: list | None,
+                        devs: np.ndarray, final: bool) -> list:
+        """Chunked shape-bucketed dispatches of unit ``i``; returns the
+        per-prefix outputs (activations, or scalars at the final depth)."""
+        import jax.numpy as jnp
+
+        outs: list = []
+        for start, stop, padded in chunked_rows(len(devs),
+                                                self.eval_batch_size):
+            dev_c = pad_rows(devs[start:stop], padded)
+            if parents is None:
+                acts = None
+            else:
+                chunk = parents[start:stop]
+                chunk = chunk + [chunk[-1]] * (padded - len(chunk))
+                acts = jnp.stack(chunk)
+            out = self.unit_fns[i](acts, jnp.asarray(dev_c, jnp.int32))
+            self.dispatches += 1
+            n = stop - start
+            outs.extend(np.asarray(out[:n]) if final else
+                        [out[j] for j in range(n)])
+        return outs
 
 
 class PopulationEvalEngine:
@@ -108,3 +374,84 @@ class PopulationEvalEngine:
                 for k, v in zip(fresh_keys[start:stop], vals[:stop - start]):
                     self._cache[k] = float(v)
         return np.array([self._cache[k] for k in keys])
+
+
+# --------------------------------------------------------------------------
+# eval_batch_size auto-tuning (the device-memory analysis launch/dryrun.py
+# applies to the LM archs, turned on the evaluator's own executables)
+# --------------------------------------------------------------------------
+def peak_memory_bytes(compiled) -> int:
+    """Peak device bytes of an AOT-compiled executable, falling back to
+    argument+output+temp when the backend does not report a peak (the
+    same fields launch/dryrun.py records per arch x shape cell)."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return 0
+    peak = int(getattr(mem, "peak_memory_in_bytes", 0) or 0)
+    if peak:
+        return peak
+    return sum(int(getattr(mem, f, 0) or 0) for f in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes"))
+
+
+def device_memory_budget(default: int = 2 << 30) -> int:
+    """Bytes of device memory the evaluator may plan against.
+
+    Order: ``REPRO_EVAL_MEM_BUDGET`` env var (bytes) -> the backend's
+    reported ``bytes_limit`` -> a quarter of host RAM (CPU backend) ->
+    ``default``.
+    """
+    env = os.environ.get("REPRO_EVAL_MEM_BUDGET")
+    if env:
+        return int(env)
+    try:
+        import jax
+        stats = jax.local_devices()[0].memory_stats() or {}
+        limit = int(stats.get("bytes_limit", 0))
+        if limit > 0:
+            return limit
+    except Exception:
+        pass
+    try:
+        pages = os.sysconf("SC_PHYS_PAGES")
+        page = os.sysconf("SC_PAGE_SIZE")
+        if pages > 0 and page > 0:
+            return pages * page // 4
+    except (ValueError, OSError, AttributeError):
+        pass
+    return default
+
+
+def auto_eval_batch_size(probe: Callable[[int], int],
+                         budget: int | None = None,
+                         reserved: int = 0,
+                         max_rows: int = 1024) -> int | None:
+    """Pick the largest power-of-two chunk whose memory footprint fits.
+
+    ``probe(n_rows)`` returns the peak device bytes of the evaluator's
+    batched executable compiled for ``n_rows`` (see
+    :func:`peak_memory_bytes`).  Two probes (1 and 2 rows) give the
+    per-row slope and the fixed intercept — the same two-point
+    extrapolation ``launch/dryrun.py`` uses for its depth cost probes;
+    footprints are linear in the vmapped row axis for the same reason
+    they are linear in depth there.  ``reserved`` carves out bytes the
+    caller keeps resident across dispatches (e.g. the staged engine's
+    activation store cap).  Returns None when the backend reports no
+    usable numbers OR no measurable per-row slope (meaning: the probe
+    carries no sizing information, so don't pretend to cap).  When even
+    one row exceeds the budget the floor is still 1 — a dispatch has to
+    happen — which is the best a chunk-size knob can do.
+    """
+    p1, p2 = probe(1), probe(2)
+    if p1 <= 0 or p2 <= 0 or p2 <= p1:
+        return None
+    per_row = p2 - p1
+    fixed = max(p1 - per_row, 0)
+    avail = (budget if budget is not None else device_memory_budget())
+    avail -= reserved + fixed
+    n = 1
+    while n * 2 <= max_rows and (n * 2) * per_row <= avail:
+        n *= 2
+    return n

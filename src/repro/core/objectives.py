@@ -39,10 +39,25 @@ device memory).  Two batched paths exist:
 Both batched paths produce results bit-identical to the per-individual
 loop (the per-row computation is unchanged; vmap only adds the
 population axis), which tests/test_eval_engine.py locks in.
+
+Staged (prefix-reuse) evaluation
+--------------------------------
+When the model exposes the per-unit ``step`` API (the CNNs in
+``repro.models.cnn``), pass ``step_fn`` and the evaluator defaults to
+``eval_strategy="staged"``: instead of re-running all L units for every
+unique chromosome, a :class:`~repro.core.eval_engine.PrefixEvalEngine`
+walks the model depth by depth and evaluates each unique *gene prefix*
+once, reusing stored activations across chromosomes and generations.
+Per-generation cost then scales with unique prefixes, not
+``unique_rows x L`` — converged NSGA-II populations share long
+prefixes, so most unit runs disappear.  ``eval_strategy="full"``
+selects the PR-1 whole-forward batched path; both are bit-identical
+(tests/test_staged_eval.py) and share one row-level result cache.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -50,8 +65,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostModel
-from repro.core.eval_engine import (PopulationEvalEngine, chunked_rows,
-                                    pad_rows)
+from repro.core.eval_engine import (PopulationEvalEngine, PrefixEvalEngine,
+                                    auto_eval_batch_size, chunked_rows,
+                                    pad_rows, peak_memory_bytes)
 from repro.core.fault import FaultSpec
 
 __all__ = [
@@ -71,23 +87,63 @@ class InferenceAccuracyEvaluator:
 
     Args:
       eval_batch_size: max chromosomes per dispatch (None = whole
-        unique batch in one dispatch).  Caps device memory; chunking
-        never changes results.
+        unique batch in one dispatch; ``"auto"`` = probe the compiled
+        executable's memory footprint and pick the largest power-of-two
+        chunk fitting the device budget, see
+        ``eval_engine.auto_eval_batch_size``).  Caps device memory;
+        chunking never changes results.
       weight_tables: optional per-(unit, device) pre-corrupted weight
         tables (``repro.models.cnn.build_weight_fault_tables``).  When
         given, ``apply_fn`` must accept ``weight_rates=None`` and skip
         weight corruption (the gathered weights are already corrupted).
+      step_fn: optional per-unit forward ``step(i, params_i, x, wr, ar,
+        seed)`` (the CNN models' ``step``).  Enables the staged
+        prefix-reuse engine; ``params`` must then be the per-unit list
+        the model's ``init`` returns.
+      eval_strategy: ``"staged"`` (prefix-reuse layer walk, requires
+        ``step_fn``), ``"full"`` (whole-forward batched path), or
+        ``"auto"`` (staged iff ``step_fn`` is given).  Both strategies
+        are bit-identical; only cost differs.
+      max_store_bytes: LRU cap on the staged engine's activation store
+        (None = unbounded).  Eviction falls back to recompute — a
+        performance knob, never a correctness one.
     """
 
     def __init__(self, apply_fn, params, x: jax.Array, labels: jax.Array,
                  spec: FaultSpec, device_fault_scale: np.ndarray,
-                 base_seed: int = 0, eval_batch_size: int | None = None,
-                 weight_tables: list | None = None):
+                 base_seed: int = 0,
+                 eval_batch_size: int | str | None = None,
+                 weight_tables: list | None = None,
+                 step_fn: Callable | None = None,
+                 eval_strategy: str = "auto",
+                 n_units: int | None = None,
+                 max_store_bytes: int | None = 256 << 20):
         self.spec = spec
         self.base_seed = base_seed
         self.labels = labels
         self.weight_tables = weight_tables
         self._acc_batch_tables = None
+        self._apply_fn = apply_fn
+        self._params = params
+        self._x = x
+        self._step_fn = step_fn
+        self._built_unit_fns = None
+        self._prefix_engine = None
+        self.max_store_bytes = max_store_bytes
+        if n_units is None:
+            try:
+                n_units = len(params)
+            except TypeError:
+                n_units = None
+        self._n_units = n_units
+        if eval_strategy == "auto":
+            eval_strategy = "staged" if step_fn is not None else "full"
+        if eval_strategy not in ("staged", "full"):
+            raise ValueError(f"unknown eval_strategy {eval_strategy!r}")
+        if eval_strategy == "staged" and (step_fn is None or not n_units):
+            raise ValueError("eval_strategy='staged' needs step_fn and "
+                             "per-unit params (n_units)")
+        self._strategy = eval_strategy
         # property setter: derives the per-device rate arrays
         self.device_fault_scale = device_fault_scale
 
@@ -122,9 +178,97 @@ class InferenceAccuracyEvaluator:
 
             self._acc_batch_tables = _acc_batch_tables
 
-        self._engine = PopulationEvalEngine(self._dispatch, eval_batch_size)
+        self._engine = PopulationEvalEngine(self._dispatch, None)
+        if self._strategy == "staged":
+            self._ensure_prefix_engine()
         self._cache = self._engine._cache      # chromosome -> faulty accuracy
+        self.eval_batch_size = eval_batch_size  # resolves "auto" via probe
         self._clean: float | None = None       # computed lazily (needs n_layers)
+
+    # -- staged (prefix-reuse) machinery ------------------------------------
+    def _ensure_prefix_engine(self) -> PrefixEvalEngine:
+        """Build the staged engine once; it shares the full path's
+        row-level result cache so strategies interoperate."""
+        if self._prefix_engine is None:
+            L = self._n_units
+            self._prefix_engine = PrefixEvalEngine(
+                [functools.partial(self._unit_dispatch, i) for i in range(L)],
+                L, eval_batch_size=self._engine.eval_batch_size,
+                max_store_bytes=self.max_store_bytes)
+            self._prefix_engine._cache = self._engine._cache
+        return self._prefix_engine
+
+    def _unit_dispatch(self, i: int, acts, devs):
+        """PrefixEvalEngine unit callable: one jit(vmap) dispatch of
+        unit ``i`` over the fresh prefixes' (parent act, device) rows."""
+        if self._built_unit_fns is None:
+            self._built_unit_fns = self._build_unit_fns()
+        return self._built_unit_fns[i](acts, devs)
+
+    def _build_unit_fns(self) -> list:
+        """One jitted vmapped executable per unit depth.
+
+        Mirrors the full path exactly: per-unit seed ``base_seed +
+        7919*i`` (what ``models.cnn._rates`` derives), weight-table
+        gather when tables exist (wr=None, acts corrupted at
+        ``a_rates_by_device[d]``), inline corruption at the per-device
+        scalar rates otherwise.  Depth 0 closes over the calibration
+        batch; the final depth folds in the Top-1 accuracy reduction so
+        logits never hit the activation store.
+        """
+        step, x, labels = self._step_fn, self._x, self.labels
+        L = self._n_units
+        a_dev = jnp.asarray(self.a_rates_by_device)
+        w_dev = jnp.asarray(self.w_rates_by_device)
+        tables = self.weight_tables
+        fns = []
+        for i in range(L):
+            s_i = int(self.base_seed) + 7919 * i
+            if tables is not None:
+                t_i = tables[i]
+                def one(act, d, i=i, t_i=t_i, s_i=s_i):
+                    p = jax.tree.map(lambda t: t[d], t_i)
+                    return step(i, p, act, None, a_dev[d], s_i)
+            else:
+                p_i = self._params[i]
+                def one(act, d, i=i, p_i=p_i, s_i=s_i):
+                    return step(i, p_i, act, w_dev[d], a_dev[d], s_i)
+            if i == L - 1:
+                def one(act, d, unit=one):
+                    logits = unit(act, d)
+                    pred = jnp.argmax(logits, axis=-1)
+                    return jnp.mean((pred == labels).astype(jnp.float32))
+            if i == 0:
+                batched = jax.jit(jax.vmap(lambda d, f=one: f(x, d)))
+                fns.append(lambda acts, devs, b=batched: b(devs))
+            else:
+                batched = jax.jit(jax.vmap(one))
+                fns.append(lambda acts, devs, b=batched: b(acts, devs))
+        return fns
+
+    def staged_stats(self) -> dict:
+        """Prefix-reuse accounting (unit runs, hits, evictions, ...)."""
+        if self._prefix_engine is None:
+            return {}
+        return self._prefix_engine.stats()
+
+    @property
+    def eval_strategy(self) -> str:
+        return self._strategy
+
+    @eval_strategy.setter
+    def eval_strategy(self, value: str):
+        if value == "auto":
+            value = "staged" if self._step_fn is not None else "full"
+        if value not in ("staged", "full"):
+            raise ValueError(f"unknown eval_strategy {value!r}")
+        if value == "staged" and (self._step_fn is None
+                                  or not self._n_units):
+            raise ValueError("eval_strategy='staged' needs step_fn and "
+                             "per-unit params (n_units)")
+        self._strategy = value
+        if value == "staged":
+            self._ensure_prefix_engine()
 
     @property
     def device_fault_scale(self) -> np.ndarray:
@@ -156,19 +300,69 @@ class InferenceAccuracyEvaluator:
                 self._engine._cache.clear()
             self.weight_tables = None
             self._acc_batch_tables = None
+            # staged state encodes the old rates too: drop the unit
+            # executables and the activation store (row cache is shared
+            # with _engine and already cleared above)
+            self._built_unit_fns = None
+            if getattr(self, "_prefix_engine", None) is not None:
+                self._prefix_engine.store.clear()
 
     @property
     def eval_batch_size(self) -> int | None:
         return self._engine.eval_batch_size
 
     @eval_batch_size.setter
-    def eval_batch_size(self, value: int | None):
+    def eval_batch_size(self, value: int | str | None):
+        if value == "auto":
+            value = self._auto_eval_batch_size()
         self._engine.eval_batch_size = value
+        if self._prefix_engine is not None:
+            self._prefix_engine.eval_batch_size = value
+
+    def _auto_eval_batch_size(self) -> int | None:
+        """Resolve ``eval_batch_size="auto"`` by probing the batched
+        executable's compiled memory footprint at 1 and 2 rows (the
+        launch/dryrun.py two-point analysis) and fitting the largest
+        power-of-two chunk into the device budget, with the staged
+        activation-store cap carved out up front.
+
+        The probe targets the executable that will actually dispatch:
+        the weight-table path when tables exist (its per-row footprint
+        includes the gathered per-unit weights, which the generic path
+        shares as vmap constants), else the generic path.  The staged
+        engine's per-unit dispatches touch strictly less than one full
+        forward per row, so the full-forward probe is a safe upper
+        bound for it.
+        """
+        L = self._n_units
+        if not L:
+            return None
+
+        def probe(n: int) -> int:
+            try:
+                if self._acc_batch_tables is not None:
+                    compiled = self._acc_batch_tables.lower(
+                        jnp.zeros((n, L), jnp.int32),
+                        jnp.int32(self.base_seed)).compile()
+                else:
+                    z = jnp.zeros((n, L), jnp.float32)
+                    compiled = self._acc_batch.lower(
+                        z, z, jnp.int32(self.base_seed)).compile()
+            except Exception:
+                return 0
+            return peak_memory_bytes(compiled)
+
+        reserved = self.max_store_bytes or 0 \
+            if self._strategy == "staged" else 0
+        return auto_eval_batch_size(probe, reserved=reserved)
 
     @property
     def dispatches(self) -> int:
         """Jitted batch dispatches issued so far (cache hits cost zero)."""
-        return self._engine.dispatches
+        n = self._engine.dispatches
+        if self._prefix_engine is not None:
+            n += self._prefix_engine.dispatches
+        return n
 
     def _dispatch(self, rows: np.ndarray) -> np.ndarray:
         """One jitted dispatch: [U, L] device rows -> [U] faulty accuracy."""
@@ -190,12 +384,19 @@ class InferenceAccuracyEvaluator:
         """P: [N, L] device ids -> ΔAcc per candidate.
 
         Deduplicates the population, evaluates only unique uncached
-        chromosomes (one vmapped dispatch per ``eval_batch_size`` chunk)
-        and scatters results back through the cache.
+        chromosomes, and scatters results back through the shared row
+        cache.  ``eval_strategy="full"`` pushes unique rows through one
+        whole-forward vmapped dispatch per ``eval_batch_size`` chunk;
+        ``"staged"`` walks the model layer by layer, evaluating each
+        unique gene prefix once (see PrefixEvalEngine).  Bit-identical
+        either way.
         """
         P = np.asarray(P)
         clean = self.clean_accuracy(P.shape[1])
-        faulty = self._engine.evaluate(P)
+        if self._strategy == "staged":
+            faulty = self._ensure_prefix_engine().evaluate(P)
+        else:
+            faulty = self._engine.evaluate(P)
         return np.maximum(0.0, clean - faulty)
 
 
@@ -242,16 +443,26 @@ class ObjectiveFn:
     evaluator's own chunk size at construction time (the evaluator is
     mutated — don't share one evaluator between ObjectiveFns that want
     different chunking); None means "leave the evaluator's setting
-    alone", not "force full-batch".
+    alone", not "force full-batch".  ``"auto"`` asks the evaluator to
+    probe its compiled memory footprint and size the chunk itself.
+    ``eval_strategy`` follows the same override-or-leave-alone rule:
+    ``"staged"`` / ``"full"`` select the ΔAcc execution path on
+    evaluators that support it (see InferenceAccuracyEvaluator).
     """
 
     cost_model: CostModel
     acc_evaluator: object | None          # None => fault-unaware baseline
     latency_weight: float = 1.0
     energy_weight: float = 1.0
-    eval_batch_size: int | None = None
+    eval_batch_size: int | str | None = None
+    eval_strategy: str | None = None
 
     def __post_init__(self):
+        # strategy first: eval_batch_size="auto" sizes its chunk against
+        # the strategy in effect (staged reserves the activation store)
+        if (self.eval_strategy is not None
+                and hasattr(self.acc_evaluator, "eval_strategy")):
+            self.acc_evaluator.eval_strategy = self.eval_strategy
         if (self.eval_batch_size is not None
                 and hasattr(self.acc_evaluator, "eval_batch_size")):
             self.acc_evaluator.eval_batch_size = self.eval_batch_size
@@ -272,6 +483,33 @@ class ObjectiveFn:
         return self.cost_model.violation(P)
 
 
+@functools.lru_cache(maxsize=32)
+def _profile_acc_batch(apply_fn):
+    """Module-level compile cache for the layer-sweep batch.
+
+    The jitted executable used to live inside
+    :func:`profile_layer_sensitivity`, so every call re-traced and
+    re-compiled from scratch.  Hoisting it here — keyed by ``apply_fn``,
+    with params/data as traced arguments — makes repeated profiling
+    calls (surrogate pipelines sweep many rates/seeds) hit jit's own
+    cache instead.
+
+    The cache key is ``apply_fn``'s identity: pass a *stable* function
+    (e.g. ``model.apply`` itself) rather than a fresh per-call closure,
+    or every call misses and re-compiles anyway.
+    """
+
+    @jax.jit
+    def _acc_batch(params, x, labels, WR, AR, seed):
+        def row(wr, ar):
+            logits = apply_fn(params, x, wr, ar, seed)
+            pred = jnp.argmax(logits, axis=-1)
+            return jnp.mean((pred == labels).astype(jnp.float32))
+        return jax.vmap(row)(WR, AR)
+
+    return _acc_batch
+
+
 def profile_layer_sensitivity(apply_fn, params, x, labels, n_layers: int,
                               spec: FaultSpec, base_seed: int = 0,
                               eval_batch_size: int | None = None,
@@ -285,16 +523,11 @@ def profile_layer_sensitivity(apply_fn, params, x, labels, n_layers: int,
 
     The clean row plus the L one-hot rows form one ``[L+1, L]`` batch
     evaluated in a single vmapped dispatch (chunked by
-    ``eval_batch_size`` if set) instead of an L-iteration loop.
+    ``eval_batch_size`` if set) instead of an L-iteration loop.  The
+    jitted executable is cached at module level (``_profile_acc_batch``)
+    so repeated calls with the same ``apply_fn`` never re-trace.
     """
-
-    @jax.jit
-    def _acc_batch(WR, AR, seed):
-        def row(wr, ar):
-            logits = apply_fn(params, x, wr, ar, seed)
-            pred = jnp.argmax(logits, axis=-1)
-            return jnp.mean((pred == labels).astype(jnp.float32))
-        return jax.vmap(row)(WR, AR)
+    _acc_batch = _profile_acc_batch(apply_fn)
 
     # row 0 = clean; row 1+l = faults on layer l only
     WR = np.zeros((n_layers + 1, n_layers), np.float32)
@@ -307,6 +540,7 @@ def profile_layer_sensitivity(apply_fn, params, x, labels, n_layers: int,
     for start, stop, padded in chunked_rows(n_layers + 1, eval_batch_size):
         wr = pad_rows(WR[start:stop], padded)
         ar = pad_rows(AR[start:stop], padded)
-        vals = np.asarray(_acc_batch(jnp.asarray(wr), jnp.asarray(ar), seed))
+        vals = np.asarray(_acc_batch(params, x, labels,
+                                     jnp.asarray(wr), jnp.asarray(ar), seed))
         accs[start:stop] = vals[:stop - start]
     return np.maximum(0.0, accs[0] - accs[1:])

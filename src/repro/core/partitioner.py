@@ -80,7 +80,8 @@ class _BasePartitioner:
                  acc_evaluator=None,
                  nsga2_config: NSGA2Config = NSGA2Config(),
                  batch: int = 1,
-                 eval_batch_size: int | None = None):
+                 eval_batch_size: int | str | None = None,
+                 eval_strategy: str | None = None):
         self.layers = layers
         self.devices = devices
         self.fault_spec = fault_spec
@@ -88,14 +89,17 @@ class _BasePartitioner:
         self.cost_model = CostModel(layers, devices,
                                     include_link_costs=self.include_link_costs,
                                     batch=batch)
-        # eval_batch_size caps chromosomes per ΔAcc device dispatch (memory
-        # knob; never changes results — see core/eval_engine.py)
+        # eval_batch_size caps chromosomes per ΔAcc device dispatch
+        # (memory knob, "auto" probes the compiled footprint) and
+        # eval_strategy selects staged prefix-reuse vs full forward;
+        # neither ever changes results — see core/eval_engine.py
         self.objective = ObjectiveFn(
             self.cost_model,
             acc_evaluator if self.uses_accuracy else None,
             latency_weight=self.latency_weight,
             energy_weight=self.energy_weight,
-            eval_batch_size=eval_batch_size)
+            eval_batch_size=eval_batch_size,
+            eval_strategy=eval_strategy)
 
     uses_accuracy = False
 

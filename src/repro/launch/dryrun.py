@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.eval_engine import peak_memory_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collective_bytes_from_hlo, model_flops,
                                    roofline_terms)
@@ -141,7 +142,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
             "output_bytes": getattr(mem, "output_size_in_bytes", 0),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            # shared with the evaluator's eval_batch_size="auto" probe
+            "peak_bytes": peak_memory_bytes(compiled),
         },
         "compile_s": round(t_full, 1),
         "probe_compile_s": [round(probes[2]["compile_s"], 1),

@@ -7,9 +7,18 @@ dataset substitution).
 
 Each model exposes:
   * ``init(key, num_classes, width)``         -> params (list of unit params)
+  * ``n_units`` / ``step(i, params_i, x, wr, ar, seed)`` -> the per-unit
+    forward contract: unit *i*'s fault injection (scalar rates, or None
+    to skip) followed by its compute AND any inter-unit glue (pool /
+    flatten / gap) that precedes unit *i+1*'s corruption point.  The
+    staged population evaluator (``core.eval_engine.PrefixEvalEngine``)
+    walks this API layer by layer so chromosomes sharing a gene prefix
+    share the activation compute.
   * ``apply(params, x, w_rates, a_rates, seed)`` -> logits, with per-UNIT
     traced fault rates (unit = partitionable layer, matching the paper's
-    layer->device mapping granularity)
+    layer->device mapping granularity).  ``apply`` is *derived* from
+    ``step`` — composing the units IS the full forward pass, so staged
+    and whole-model execution cannot drift apart.
   * ``layer_infos(num_classes, width, img)``  -> list[LayerInfo] for the
     cost model.
 
@@ -154,10 +163,30 @@ def build_weight_fault_tables(params, w_rates_by_device, base_seed: int = 0):
     return jax.block_until_ready(_build())
 
 
+class _StepModel:
+    """Derives the whole-model forward pass from the per-unit step API.
+
+    ``step(i, params_i, x, wr, ar, seed)`` takes unit *i*'s params, its
+    input activation, scalar fault rates (either may be None to skip
+    that corruption — e.g. pre-corrupted weight tables pass wr=None)
+    and the unit's already-offset fault seed.  ``apply`` is the ordered
+    composition of the L steps, so both execution modes share one
+    definition of the math.
+    """
+
+    n_units: int = 0
+
+    @classmethod
+    def apply(cls, params, x, w_rates=None, a_rates=None, seed=0):
+        for i in range(cls.n_units):
+            x = cls.step(i, params[i], x, *_rates(w_rates, a_rates, seed, i))
+        return x
+
+
 # ==========================================================================
 # AlexNet (5 conv + 3 fc = 8 partitionable units)
 # ==========================================================================
-class AlexNet:
+class AlexNet(_StepModel):
     n_units = 8
 
     @staticmethod
@@ -184,21 +213,17 @@ class AlexNet:
         return p
 
     @staticmethod
-    def apply(params, x, w_rates=None, a_rates=None, seed=0):
-        pools_after = {0, 1, 4}
-        for i in range(5):
-            p, xi = _corrupt_unit(params[i], x, *_rates(w_rates, a_rates, seed, i))
-            x = jax.nn.relu(_conv(p, xi))
-            if i in pools_after:
+    def step(i, p, x, wr=None, ar=None, seed=0):
+        p, x = _corrupt_unit(p, x, wr, ar, seed)
+        if i < 5:
+            x = jax.nn.relu(_conv(p, x))
+            if i in (0, 1, 4):       # pools_after
                 x = _maxpool(x)
-        x = x.reshape(x.shape[0], -1)
-        for j in range(3):
-            i = 5 + j
-            p, xi = _corrupt_unit(params[i], x, *_rates(w_rates, a_rates, seed, i))
-            x = xi @ p["w"] + p["b"]
-            if j < 2:
-                x = jax.nn.relu(x)
-        return x
+            if i == 4:               # conv->fc boundary: flatten
+                x = x.reshape(x.shape[0], -1)
+            return x
+        x = x @ p["w"] + p["b"]
+        return jax.nn.relu(x) if i < 7 else x
 
     @staticmethod
     def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):
@@ -229,7 +254,7 @@ class AlexNet:
 # ==========================================================================
 # SqueezeNet (conv1 + 8 fire modules + conv10 = 10 units)
 # ==========================================================================
-class SqueezeNet:
+class SqueezeNet(_StepModel):
     n_units = 10
 
     @staticmethod
@@ -257,23 +282,18 @@ class SqueezeNet:
         return p
 
     @staticmethod
-    def apply(params, x, w_rates=None, a_rates=None, seed=0):
-        p, xi = _corrupt_unit(params[0], x, *_rates(w_rates, a_rates, seed, 0))
-        x = jax.nn.relu(_conv(p["conv"], xi, stride=1))
-        x = _maxpool(x)
-        pools_after = {1, 3}          # fire indices after which to pool
-        for i in range(8):
-            u = 1 + i
-            p, xi = _corrupt_unit(params[u], x, *_rates(w_rates, a_rates, seed, u))
-            s = jax.nn.relu(_conv(p["squeeze"], xi))
-            e1 = jax.nn.relu(_conv(p["e1"], s))
-            e3 = jax.nn.relu(_conv(p["e3"], s))
-            x = jnp.concatenate([e1, e3], axis=-1)
-            if i in pools_after:
-                x = _maxpool(x)
-        p, xi = _corrupt_unit(params[9], x, *_rates(w_rates, a_rates, seed, 9))
-        x = _conv(p["conv"], xi)
-        return _gap(x)
+    def step(i, p, x, wr=None, ar=None, seed=0):
+        p, x = _corrupt_unit(p, x, wr, ar, seed)
+        if i == 0:
+            return _maxpool(jax.nn.relu(_conv(p["conv"], x, stride=1)))
+        if i == 9:
+            return _gap(_conv(p["conv"], x))
+        s = jax.nn.relu(_conv(p["squeeze"], x))
+        e1 = jax.nn.relu(_conv(p["e1"], s))
+        e3 = jax.nn.relu(_conv(p["e3"], s))
+        x = jnp.concatenate([e1, e3], axis=-1)
+        # fire indices 1 and 3 pool after
+        return _maxpool(x) if i - 1 in (1, 3) else x
 
     @staticmethod
     def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):
@@ -306,7 +326,7 @@ class SqueezeNet:
 # ==========================================================================
 # ResNet18 (stem + 8 basic blocks + fc = 10 units)
 # ==========================================================================
-class ResNet18:
+class ResNet18(_StepModel):
     n_units = 10
 
     @staticmethod
@@ -336,21 +356,19 @@ class ResNet18:
         return p
 
     @staticmethod
-    def apply(params, x, w_rates=None, a_rates=None, seed=0):
-        p, xi = _corrupt_unit(params[0], x, *_rates(w_rates, a_rates, seed, 0))
-        x = jax.nn.relu(_conv(p["conv"], xi))
-        for u in range(1, 9):
-            stage, blk = (u - 1) // 2, (u - 1) % 2
-            stride = 2 if (stage > 0 and blk == 0) else 1
-            fp, xi = _corrupt_unit(params[u], x,
-                                   *_rates(w_rates, a_rates, seed, u))
-            h = jax.nn.relu(_conv(fp["c1"], xi, stride=stride))
-            h = _conv(fp["c2"], h)
-            sc = _conv(fp["proj"], xi, stride=stride) if "proj" in fp else xi
-            x = jax.nn.relu(h + sc)
-        x = _gap(x)
-        p, xi = _corrupt_unit(params[9], x, *_rates(w_rates, a_rates, seed, 9))
-        return xi @ p["w"] + p["b"]
+    def step(i, p, x, wr=None, ar=None, seed=0):
+        fp, x = _corrupt_unit(p, x, wr, ar, seed)
+        if i == 0:
+            return jax.nn.relu(_conv(fp["conv"], x))
+        if i == 9:
+            return x @ fp["w"] + fp["b"]
+        stage, blk = (i - 1) // 2, (i - 1) % 2
+        stride = 2 if (stage > 0 and blk == 0) else 1
+        h = jax.nn.relu(_conv(fp["c1"], x, stride=stride))
+        h = _conv(fp["c2"], h)
+        sc = _conv(fp["proj"], x, stride=stride) if "proj" in fp else x
+        x = jax.nn.relu(h + sc)
+        return _gap(x) if i == 8 else x   # block->fc boundary
 
     @staticmethod
     def layer_infos(num_classes=16, width: float = 1.0, img: int = 32):

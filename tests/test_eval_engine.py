@@ -168,7 +168,11 @@ def test_engine_chunk_plan():
     assert chunked_rows(0, None) == []
     assert chunked_rows(5, None) == [(0, 5, 8)]        # pow2 bucket
     assert chunked_rows(4, 4) == [(0, 4, 4)]
-    assert chunked_rows(7, 3) == [(0, 3, 3), (3, 6, 3), (6, 7, 3)]
+    # trailing partial chunk pads to its own pow2 bucket, not the full
+    # configured size (a big "auto" cap must not inflate small batches)
+    assert chunked_rows(7, 3) == [(0, 3, 3), (3, 6, 3), (6, 7, 1)]
+    assert chunked_rows(5, 1024) == [(0, 5, 8)]
+    assert chunked_rows(9, 8) == [(0, 8, 8), (8, 9, 1)]
 
 
 def test_engine_generic_rows():

@@ -1,0 +1,306 @@
+"""Staged (prefix-reuse) evaluation: bit-exactness + unit-run economy.
+
+The contract under test (see core/eval_engine.PrefixEvalEngine and
+README "The batched evaluation engine"):
+  * the per-unit ``step`` API composes to exactly ``apply`` (the models
+    derive ``apply`` from ``step``, and this locks that in);
+  * staged ``delta_acc`` == full-forward ``delta_acc`` == per-individual
+    loop, bit for bit, across all three CNNs, weight-table and generic
+    paths, chunked and unchunked;
+  * per-generation unit runs scale with unique gene *prefixes*, not
+    ``rows x L`` (the prefix-reuse analogue of the dispatch-count test);
+  * LRU eviction of the activation store degrades to recompute, never
+    to wrong results;
+  * ``eval_batch_size="auto"`` resolves via the compiled-footprint probe;
+  * ``profile_layer_sensitivity``'s jitted sweep is compile-cached at
+    module level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultSpec, InferenceAccuracyEvaluator
+from repro.core.eval_engine import ActivationStore, auto_eval_batch_size
+from repro.core.objectives import ObjectiveFn, _profile_acc_batch
+from repro.data import ImageClassData
+from repro.models.cnn import CNN_MODELS, _rates, build_weight_fault_tables
+from repro.testing.reference import loop_delta_acc
+
+SCALE = np.array([1.0, 0.1])
+SPEC = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return ImageClassData(num_classes=8, img=16, seed=0)
+
+
+def _setup(name, data, n_eval=4):
+    model = CNN_MODELS[name]
+    params = model.init(jax.random.PRNGKey(2), num_classes=8, width=0.25,
+                        img=16)
+    x, y = data.batch(n_eval, seed=4)
+
+    def apply_fn(p, xx, wr, ar, seed):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=seed)
+
+    return model, params, apply_fn, jnp.asarray(x), jnp.asarray(y)
+
+
+def _evaluator(model, params, apply_fn, x, y, staged, tables=None, **kw):
+    return InferenceAccuracyEvaluator(
+        apply_fn, params, x, y, SPEC, SCALE, weight_tables=tables,
+        step_fn=model.step if staged else None,
+        eval_strategy="staged" if staged else "full", **kw)
+
+
+def _tables(params):
+    w_rates = np.asarray(SPEC.weight_fault_rate
+                         * np.asarray(SCALE, np.float32), np.float32)
+    return build_weight_fault_tables(params, w_rates, base_seed=0)
+
+
+# --------------------------------------------------------------------------
+# step API
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["alexnet", "squeezenet", "resnet18"])
+def test_step_composition_matches_apply(name, data):
+    model, params, apply_fn, x, y = _setup(name, data)
+    L = model.n_units
+    row = np.random.default_rng(0).integers(0, 2, size=L)
+    wr = jnp.asarray(SPEC.weight_fault_rate * SCALE[row], jnp.float32)
+    ar = jnp.asarray(SPEC.act_fault_rate * SCALE[row], jnp.float32)
+
+    ref = model.apply(params, x, w_rates=wr, a_rates=ar, seed=3)
+    xx = x
+    for i in range(L):
+        xx = model.step(i, params[i], xx, *_rates(wr, ar, 3, i))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(xx))
+
+    # clean path: both rate vectors None => no fault machinery at all
+    ref = model.apply(params, x)
+    xx = x
+    for i in range(L):
+        xx = model.step(i, params[i], xx, *_rates(None, None, 0, i))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(xx))
+
+
+# --------------------------------------------------------------------------
+# bit-exactness sweep: 3 CNNs x {generic, tables} x {unchunked, chunked}
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["alexnet", "squeezenet", "resnet18"])
+@pytest.mark.parametrize("use_tables", [False, True])
+def test_staged_matches_full_bitwise(name, use_tables, data):
+    model, params, apply_fn, x, y = _setup(name, data)
+    tables = _tables(params) if use_tables else None
+    P = np.random.default_rng(1).integers(0, 2, size=(5, model.n_units))
+
+    ref = _evaluator(model, params, apply_fn, x, y, staged=False,
+                     tables=tables).delta_acc(P)
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True,
+                    tables=tables)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+    st = ev.staged_stats()
+    assert 0 < st["unit_runs"] <= st["full_unit_runs"]
+
+    # chunking changes dispatch sizes only, never values
+    ev_c = _evaluator(model, params, apply_fn, x, y, staged=True,
+                      tables=tables, eval_batch_size=3)
+    np.testing.assert_array_equal(ev_c.delta_acc(P), ref)
+
+
+def test_staged_matches_per_individual_loop(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    P = np.random.default_rng(2).integers(0, 2, size=(6, model.n_units))
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True)
+    np.testing.assert_array_equal(ev.delta_acc(P), loop_delta_acc(ev, P))
+
+
+# --------------------------------------------------------------------------
+# prefix-reuse economy (the staged analogue of the dispatch-count test)
+# --------------------------------------------------------------------------
+def test_unit_runs_scale_with_unique_prefixes(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    L = model.n_units
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True)
+
+    # two rows identical except the LAST gene: all L-1 shared prefix
+    # units run once, only the final unit runs twice
+    P = np.ones((2, L), np.int64)
+    P[1, -1] = 0
+    ev.delta_acc(P)
+    st = ev.staged_stats()
+    assert st["unit_runs"] == L + 1
+    assert st["rows_evaluated"] == 2
+
+    # same population again: fully row-cached, zero new unit runs
+    ev.delta_acc(P)
+    assert ev.staged_stats()["unit_runs"] == L + 1
+
+    # a child mutated at gene L-2 reuses the stored prefix chain up to
+    # depth L-3 (cross-generation reuse): only units L-2 and L-1 run
+    P2 = np.ones((1, L), np.int64)
+    P2[0, -2] = 0
+    before = ev.staged_stats()["unit_runs"]
+    ev.delta_acc(P2)
+    st = ev.staged_stats()
+    assert st["unit_runs"] == before + 2
+    assert st["prefix_hits"] >= 1
+
+
+def test_duplicate_rows_dedup_before_any_dispatch(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    L = model.n_units
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True)
+    P = np.zeros((5, L), np.int64)
+    P[1] = P[2] = 1
+    d = ev.delta_acc(P)
+    assert d.shape == (5,)
+    st = ev.staged_stats()
+    assert st["rows_evaluated"] == 2
+    # two unique rows with NO shared prefix (0... vs 1...): 2L unit runs
+    assert st["unit_runs"] == 2 * L
+    # cached population reversal: zero additional dispatches
+    d2 = ev.delta_acc(P[::-1])
+    np.testing.assert_array_equal(d2, d[::-1])
+    assert ev.staged_stats()["unit_runs"] == 2 * L
+
+
+# --------------------------------------------------------------------------
+# LRU activation store
+# --------------------------------------------------------------------------
+def test_activation_store_lru_and_pinning():
+    store = ActivationStore(max_bytes=8 * 4)   # room for two [4] f32 acts
+    a = np.zeros(4, np.float32)
+    store.put((0,), a)
+    store.put((1,), a)
+    assert (0,) in store and (1,) in store
+    store.get((0,))                     # (0,) now most-recently-used
+    store.put((2,), a)                  # evicts LRU == (1,)
+    assert (1,) not in store and (0,) in store and (2,) in store
+    assert store.evictions == 1
+    # pinned keys survive even when over budget
+    store.put((3,), a, pinned={(0,), (2,), (3,)})
+    assert (0,) in store and (2,) in store and (3,) in store
+
+
+def test_lru_eviction_falls_back_to_recompute(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    L = model.n_units
+    P = np.random.default_rng(3).integers(0, 2, size=(4, L))
+    ref = _evaluator(model, params, apply_fn, x, y,
+                     staged=False).delta_acc(P)
+
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True,
+                    max_store_bytes=1)      # evict almost everything
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+    assert ev.staged_stats()["evictions"] > 0
+
+    # a second population sharing only SHALLOW prefixes forces the
+    # recompute path (the shallow activations were evicted) — slower,
+    # still bit-identical
+    P2 = P.copy()
+    P2[:, 1:] = 1 - P2[:, 1:]
+    ref2 = _evaluator(model, params, apply_fn, x, y,
+                      staged=False).delta_acc(P2)
+    np.testing.assert_array_equal(ev.delta_acc(P2), ref2)
+
+
+# --------------------------------------------------------------------------
+# fault-environment shift invalidates staged state
+# --------------------------------------------------------------------------
+def test_fault_scale_update_rebuilds_staged_state(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True,
+                    tables=_tables(params))
+    P = np.random.default_rng(4).integers(0, 2, size=(4, model.n_units))
+    ev.delta_acc(P)
+
+    new_scale = np.array([1.5, 0.5])
+    ev.device_fault_scale = new_scale          # what runtime.py does
+    ev._cache.clear()
+    ev._clean = None
+    assert ev.weight_tables is None            # stale tables dropped
+    assert ev._built_unit_fns is None          # stale unit fns dropped
+    assert len(ev._prefix_engine.store) == 0   # stale activations dropped
+
+    fresh = InferenceAccuracyEvaluator(apply_fn, params, x, y, SPEC,
+                                       new_scale, step_fn=model.step,
+                                       eval_strategy="staged")
+    np.testing.assert_array_equal(ev.delta_acc(P), fresh.delta_acc(P))
+
+
+# --------------------------------------------------------------------------
+# eval_batch_size="auto" + knob threading
+# --------------------------------------------------------------------------
+def test_auto_eval_batch_size_helper():
+    probe = lambda n: 1000 + 100 * n           # fixed 1000 + 100/row
+    assert auto_eval_batch_size(probe, budget=1000 + 100 * 64) == 64
+    assert auto_eval_batch_size(probe, budget=1000 + 100 * 63) == 32
+    assert auto_eval_batch_size(probe, budget=10 ** 12, max_rows=256) == 256
+    # reserved bytes are carved out of the budget
+    assert auto_eval_batch_size(probe, budget=1000 + 100 * 64,
+                                reserved=100 * 32) == 32
+    # tiny budget still returns a usable chunk
+    assert auto_eval_batch_size(probe, budget=0) == 1
+    # backend reports nothing -> no cap
+    assert auto_eval_batch_size(lambda n: 0, budget=10 ** 9) is None
+    # flat probe (no measurable per-row slope) -> no sizing info -> no cap
+    assert auto_eval_batch_size(lambda n: 5000, budget=10 ** 9) is None
+
+
+def test_auto_eval_batch_size_on_evaluator(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    ev = _evaluator(model, params, apply_fn, x, y, staged=True,
+                    eval_batch_size="auto")
+    assert ev.eval_batch_size is None or (
+        isinstance(ev.eval_batch_size, int) and ev.eval_batch_size >= 1)
+    P = np.random.default_rng(5).integers(0, 2, size=(3, model.n_units))
+    ref = _evaluator(model, params, apply_fn, x, y,
+                     staged=False).delta_acc(P)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+
+
+def test_objective_fn_threads_eval_strategy():
+    class FakeEvaluator:
+        eval_strategy = "staged"
+        eval_batch_size = None
+
+    class FakeCostModel:
+        pass
+
+    ev = FakeEvaluator()
+    ObjectiveFn(FakeCostModel(), ev, eval_strategy="full",
+                eval_batch_size=7)
+    assert ev.eval_strategy == "full"
+    assert ev.eval_batch_size == 7
+    ev2 = FakeEvaluator()
+    ObjectiveFn(FakeCostModel(), ev2)          # None = leave alone
+    assert ev2.eval_strategy == "staged"
+
+
+def test_eval_strategy_validation(data):
+    model, params, apply_fn, x, y = _setup("alexnet", data)
+    with pytest.raises(ValueError):
+        InferenceAccuracyEvaluator(apply_fn, params, x, y, SPEC, SCALE,
+                                   eval_strategy="staged")  # no step_fn
+    with pytest.raises(ValueError):
+        InferenceAccuracyEvaluator(apply_fn, params, x, y, SPEC, SCALE,
+                                   eval_strategy="bogus")
+
+
+# --------------------------------------------------------------------------
+# profile_layer_sensitivity compile cache
+# --------------------------------------------------------------------------
+def test_profile_compile_cache_is_hoisted():
+    def apply_fn(p, x, wr, ar, seed):
+        return x
+
+    # same apply_fn -> the SAME jitted executable (no per-call retrace)
+    assert _profile_acc_batch(apply_fn) is _profile_acc_batch(apply_fn)
+
+    def other(p, x, wr, ar, seed):
+        return x
+
+    assert _profile_acc_batch(other) is not _profile_acc_batch(apply_fn)
