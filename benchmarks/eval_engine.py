@@ -31,6 +31,13 @@ hit rate to results/bench/prefix_reuse.json.  With ``--smoke`` this
 doubles as the CI regression guard: the run FAILS if the staged path
 executes more unit runs than the full path would.
 
+``--lm [arch]`` runs the same generational replay on a transformer
+config (reduced scale, per-unit step API via
+``models.transformer.LMStepModel``, INT8-class fault regime, 4 pod
+tiers) and writes results/bench/prefix_reuse_lm.json.  Its ``--smoke``
+guard is stricter: the replay must avoid >= 30 % of the unit runs the
+full-forward path would execute (ISSUE 3 acceptance criterion).
+
 The default configuration is the *dispatch-bound* regime — a small
 calibration batch, the regime an edge-accelerator deployment sees where
 a forward pass is microseconds and per-candidate dispatch overhead
@@ -184,6 +191,51 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
     return rec
 
 
+def _trace_nsga2(layers, devices, pop, gens, seed):
+    """Record the exact population sequence a converging NSGA-II search
+    evaluates (selection driven by the calibrated-surrogate objective:
+    cheap, deterministic, converging like the real search)."""
+    from repro.core import CostModel, NSGA2Config, nsga2
+    from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
+
+    cm = CostModel(layers, devices)
+    obj = ObjectiveFn(cm, SurrogateAccuracyEvaluator(cm))
+    trace: list[np.ndarray] = []
+
+    def recording(P):
+        trace.append(np.asarray(P).copy())
+        return obj(P)
+
+    nsga2(recording, n_genes=len(layers), n_devices=len(devices),
+          config=NSGA2Config(population=pop, generations=gens, seed=seed),
+          violation_fn=obj.violation)
+    return trace
+
+
+def _replay(ev, trace, clear, stats_fn):
+    """Warm every bucket shape, drop caches, then time a full replay of
+    the traced population sequence; returns (seconds, values, counter
+    deltas).  For staged evaluators the deltas get their own
+    ``prefix_hit_rate`` (the timed pass's rate, not lifetime — same
+    formula as PrefixEvalEngine.stats)."""
+    for P in trace:
+        ev.delta_acc(P)
+    clear()
+    before = dict(stats_fn())
+    vals = []
+    t0 = time.perf_counter()
+    for P in trace:
+        vals.append(ev.delta_acc(P))
+    dt = time.perf_counter() - t0
+    stats = {k: v - before[k] if isinstance(v, int) else v
+             for k, v in stats_fn().items()}
+    if "prefix_hits" in stats:
+        needed = stats["unit_runs"] - stats["recomputes"] \
+            + stats["prefix_hits"]
+        stats["prefix_hit_rate"] = stats["prefix_hits"] / max(needed, 1)
+    return dt, vals, stats
+
+
 def run_generational(model_name: str = "alexnet", pop: int = 60,
                      gens: int = 20, n_eval: int = 64, width: float = 0.125,
                      img: int = 16, seed: int = 0,
@@ -207,10 +259,8 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
     """
     import jax
     import jax.numpy as jnp
-    from repro.core import (CostModel, FaultSpec, InferenceAccuracyEvaluator,
-                            NSGA2Config, nsga2)
+    from repro.core import FaultSpec, InferenceAccuracyEvaluator
     from repro.core.costmodel import PAPER_DEVICES
-    from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
     from repro.models.cnn import CNN_MODELS, build_weight_fault_tables
 
     model = CNN_MODELS[model_name]
@@ -221,17 +271,7 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
 
     # ---- trace the population sequence a real search evaluates ----------
     layers = model.layer_infos(num_classes=16, width=width, img=img)
-    cm = CostModel(layers, PAPER_DEVICES)
-    obj = ObjectiveFn(cm, SurrogateAccuracyEvaluator(cm))
-    trace: list[np.ndarray] = []
-
-    def recording(P):
-        trace.append(np.asarray(P).copy())
-        return obj(P)
-
-    nsga2(recording, n_genes=L, n_devices=len(PAPER_DEVICES),
-          config=NSGA2Config(population=pop, generations=gens, seed=seed),
-          violation_fn=obj.violation)
+    trace = _trace_nsga2(layers, PAPER_DEVICES, pop, gens, seed)
 
     # ---- evaluators (both on the PR-1 weight-table fast path) ------------
     params = model.init(jax.random.PRNGKey(0), num_classes=16, width=width,
@@ -252,34 +292,17 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
             step_fn=model.step if staged else None,
             eval_strategy="staged" if staged else "full")
 
-    def replay(ev, clear, stats_fn):
-        for P in trace:             # warm-up: compile every bucket shape
-            ev.delta_acc(P)
-        clear()
-        before = dict(stats_fn())
-        vals = []
-        t0 = time.perf_counter()
-        for P in trace:
-            vals.append(ev.delta_acc(P))
-        dt = time.perf_counter() - t0
-        stats = {k: v - before[k] if isinstance(v, int) else v
-                 for k, v in stats_fn().items()}
-        return dt, vals, stats
-
     ev_full = fresh(staged=False)
-    t_full, v_full, full_stats = replay(
-        ev_full, ev_full._cache.clear,
+    t_full, v_full, full_stats = _replay(
+        ev_full, trace, ev_full._cache.clear,
         lambda: {"rows_evaluated": ev_full._engine.rows_evaluated,
                  "dispatches": ev_full._engine.dispatches})
     full_rows = full_stats["rows_evaluated"]
     ev_st = fresh(staged=True)
-    t_st, v_st, st = replay(ev_st, ev_st._prefix_engine.clear,
-                            ev_st.staged_stats)
+    t_st, v_st, st = _replay(ev_st, trace, ev_st._prefix_engine.clear,
+                             ev_st.staged_stats)
     for g, (a, b) in enumerate(zip(v_full, v_st)):
         assert (a == b).all(), f"staged != full at generation {g}"
-    # the timed pass's own hit rate (counter deltas, not lifetime)
-    needed = st["unit_runs"] - st["recomputes"] + st["prefix_hits"]
-    st["prefix_hit_rate"] = st["prefix_hits"] / max(needed, 1)
     candidates = pop * (gens + 1)       # initial population + children/gen
     rec = {
         "config": {"model": model_name, "pop": pop, "generations": gens,
@@ -304,6 +327,85 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
     return rec
 
 
+def run_lm_generational(arch: str = "olmo-1b", pop: int = 24,
+                        gens: int = 8, B: int = 2, S: int = 16,
+                        seed: int = 0,
+                        eval_batch_size: int | None = None) -> dict:
+    """Staged vs full-forward replay for a transformer arch (ISSUE 3).
+
+    The LM twin of :func:`run_generational`: the same converging
+    NSGA-II population trace, replayed through the full-forward and the
+    staged prefix-reuse paths of the *transformer* step API
+    (``models.transformer.LMStepModel`` via
+    ``core.objectives.make_lm_accuracy_evaluator``), asserting
+    bit-identical ΔAcc per generation.
+
+    Runs the ``reduced()`` config (CPU smoke scale — the CI lane's
+    "smallest config, 2 units deep") over the 4-level pod-tier ladder,
+    in the paper's INT8-class fault regime via ``FaultSpec(bits=8)``
+    (the default 16-bit/4-LSB one barely moves token-level top-1 at
+    this scale).  Labels are the clean model's own argmax so ΔAcc
+    measures pure corruption.
+    """
+    from repro.configs import get_config
+    from repro.core import FaultSpec
+    from repro.core.costmodel import POD_TIERS_4
+    from repro.core.objectives import make_lm_accuracy_evaluator
+    from repro.models.graph import lm_layer_infos
+    from repro.testing.lm_harness import lm_calibration_setup
+
+    cfg = get_config(arch).reduced()
+    scale = np.array([d.fault_scale for d in POD_TIERS_4])
+    spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2, bits=8)
+
+    infos = lm_layer_infos(cfg, seq=S)
+    trace = _trace_nsga2(infos, POD_TIERS_4, pop, gens, seed)
+    params, batch, labels = lm_calibration_setup(cfg, B=B, S=S, seed=seed)
+
+    def fresh(staged):
+        return make_lm_accuracy_evaluator(
+            cfg, params, batch, labels, spec, scale,
+            eval_batch_size=eval_batch_size,
+            eval_strategy="staged" if staged else "full")
+
+    ev_full = fresh(staged=False)
+    t_full, v_full, full_stats = _replay(
+        ev_full, trace, ev_full._cache.clear,
+        lambda: {"rows_evaluated": ev_full._engine.rows_evaluated,
+                 "dispatches": ev_full._engine.dispatches})
+    ev_st = fresh(staged=True)
+    t_st, v_st, st = _replay(ev_st, trace, ev_st._prefix_engine.clear,
+                             ev_st.staged_stats)
+
+    for g, (a, b) in enumerate(zip(v_full, v_st)):
+        assert (a == b).all(), f"LM staged != full at generation {g}"
+    L = ev_st._n_units
+    full_rows = full_stats["rows_evaluated"]
+    candidates = pop * (gens + 1)
+    return {
+        "config": {"arch": arch, "reduced": True, "n_units": L,
+                   "pop": pop, "generations": gens, "B": B, "S": S,
+                   "eval_batch_size": eval_batch_size, "seed": seed,
+                   "n_devices": len(scale), "fault_bits": 8},
+        "candidates": candidates,
+        "unique_rows": full_rows,
+        "per_candidate_ms": {
+            "full": t_full / candidates * 1e3,
+            "staged": t_st / candidates * 1e3,
+        },
+        "staged_speedup_vs_full": t_full / t_st,
+        "unit_runs": {
+            "full": full_rows * L,
+            "staged": st["unit_runs"],
+            "avoided": st["full_unit_runs"] - st["unit_runs"],
+        },
+        "avoided_frac": (st["full_unit_runs"] - st["unit_runs"])
+        / max(st["full_unit_runs"], 1),
+        "prefix_hit_rate": st["prefix_hit_rate"],
+        "staged_stats": st,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--model", default="alexnet",
@@ -325,6 +427,13 @@ def main():
                          "(compute-bound regime where unit runs dominate)")
     ap.add_argument("--skip-generational", action="store_true",
                     help="only run the single-population microbenchmark")
+    ap.add_argument("--lm", metavar="ARCH", default=None,
+                    help="run ONLY the transformer generational replay "
+                         "on this arch's reduced config (writes "
+                         "prefix_reuse_lm.json; with --smoke, fails "
+                         "unless >=30%% of unit runs are avoided)")
+    ap.add_argument("--lm-pop", type=int, default=24)
+    ap.add_argument("--lm-gens", type=int, default=8)
     ap.add_argument("--paper", action="store_true",
                     help="paper-scale eval batch (512 samples, width .5, "
                          "img 32): compute-bound regime")
@@ -335,6 +444,34 @@ def main():
     args = ap.parse_args()
     from repro.core.eval_engine import parse_eval_batch_size
     ebs = parse_eval_batch_size(args.eval_batch_size)
+
+    if args.lm:
+        rec = run_lm_generational(arch=args.lm, pop=args.lm_pop,
+                                  gens=args.lm_gens, eval_batch_size=ebs)
+        ur = rec["unit_runs"]
+        print("# benchmark,us_per_call,derived")
+        print(f"eval_engine.lm_generational_full,"
+              f"{rec['per_candidate_ms']['full']*1e3:.0f},"
+              f"unit_runs={ur['full']}")
+        print(f"eval_engine.lm_generational_staged,"
+              f"{rec['per_candidate_ms']['staged']*1e3:.0f},"
+              f"speedup={rec['staged_speedup_vs_full']:.2f}x "
+              f"unit_runs={ur['staged']} avoided={ur['avoided']} "
+              f"avoided_frac={rec['avoided_frac']:.2f} "
+              f"hit_rate={rec['prefix_hit_rate']:.2f}")
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "prefix_reuse_lm.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(f"# wrote {out}")
+        if args.smoke and (ur["staged"] > ur["full"]
+                           or rec["avoided_frac"] < 0.30):
+            print(f"FAIL: LM staged replay avoided only "
+                  f"{rec['avoided_frac']:.0%} of the full path's "
+                  f"{ur['full']} unit runs (< 30% guard) — prefix "
+                  f"reuse regressed on the transformer step API")
+            sys.exit(1)
+        return rec
 
     kw = dict(model_name=args.model, pop=args.pop, n_eval=args.n_eval,
               width=args.width, img=args.img, reps=args.reps,

@@ -13,10 +13,16 @@ for EXPERIMENTS.md.
                   sensitivity profiling -> calibrated surrogate ->
                   full NSGA-II search + fidelity check
                   (``--surrogate [model]`` runs only this)
+  bench_lm      — LM partitioning through the same pipeline as the
+                  CNNs (``--lm [arch]`` runs only this): full-config
+                  surrogate search over the analytic layer graph, plus
+                  a reduced-config search with the TRUE staged
+                  fault-injected evaluator in the NSGA-II loop when
+                  ``lm_eval_strategy`` resolves the arch to "staged"
 
 Flags: ``--paper`` (paper-scale pop/gens), ``--eval-batch-size N|auto``
 (chromosomes per ΔAcc dispatch), ``--eval-strategy staged|full`` (ΔAcc
-execution path; staged prefix-reuse is the CNN default).
+execution path; staged prefix-reuse is the CNN and small-LM default).
 """
 from __future__ import annotations
 
@@ -312,24 +318,99 @@ def bench_surrogate(name: str = "resnet18"):
     return rec
 
 
+def bench_lm(arch: str = "olmo-1b"):
+    """LM partitioning end to end — no CNN/LM split (ISSUE 3).
+
+    Two searches through ``core.partitioner.lm_partitioner``:
+
+      1. the FULL config's analytic layer graph with the sensitivity
+         surrogate — the only option at 27-480B scale, and what
+         ``models.graph.lm_eval_strategy`` resolves for those configs;
+      2. when the policy resolves the arch to "staged": a reduced-scale
+         search with the TRUE staged fault-injected evaluator in the
+         NSGA-II loop (``make_lm_accuracy_evaluator``; INT8-class fault
+         regime; labels = clean model's own argmax), reporting the
+         prefix-reuse accounting alongside the front.
+    """
+    from repro.configs import get_config
+    from repro.core import FaultSpec, NSGA2Config, lm_partitioner
+    from repro.core.costmodel import POD_TIERS_4
+    from repro.core.objectives import make_lm_accuracy_evaluator
+    from repro.models.graph import lm_eval_strategy
+    from repro.testing.lm_harness import lm_calibration_setup
+
+    cfg_full = get_config(arch)
+    policy = lm_eval_strategy(cfg_full)
+    nsga = NSGA2Config(population=POP, generations=GEN, seed=0)
+
+    t0 = time.time()
+    plan_sur = lm_partitioner(cfg_full, nsga2_config=nsga).optimize()
+    sur_s = time.time() - t0
+    print(f"lm.{arch}.surrogate,{sur_s*1e6:.0f},"
+          f"policy={policy} front={len(plan_sur.front)} "
+          f"lat_ms={plan_sur.latency*1e3:.3g} dacc={plan_sur.delta_acc:.4g}")
+
+    rec = {"arch": arch, "policy": policy,
+           "surrogate": {"front_size": len(plan_sur.front),
+                         "latency_ms": plan_sur.latency * 1e3,
+                         "energy_mj": plan_sur.energy * 1e3,
+                         "delta_acc": plan_sur.delta_acc,
+                         "partition": plan_sur.partition.tolist(),
+                         "seconds": sur_s}}
+
+    if policy == "staged":
+        cfg = cfg_full.reduced()
+        S = 16
+        spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2, bits=8)
+        scale = np.array([d.fault_scale for d in POD_TIERS_4])
+        params, batch, labels = lm_calibration_setup(cfg, S=S)
+        ev = make_lm_accuracy_evaluator(
+            cfg, params, batch, labels, spec, scale,
+            eval_batch_size=EVAL_BATCH, eval_strategy=EVAL_STRATEGY)
+        t0 = time.time()
+        plan = lm_partitioner(cfg, ev, seq=S, nsga2_config=nsga).optimize()
+        staged_s = time.time() - t0
+        st = ev.staged_stats()
+        rec["staged_reduced"] = {
+            "n_units": ev._n_units, "front_size": len(plan.front),
+            "delta_acc": plan.delta_acc,
+            "partition": plan.partition.tolist(),
+            "clean_accuracy": ev.clean_accuracy(),
+            "seconds": staged_s, "staged_stats": st}
+        print(f"lm.{arch}.staged_reduced,{staged_s*1e6:.0f},"
+              f"front={len(plan.front)} dacc={plan.delta_acc:.4g} "
+              f"unit_runs={st.get('unit_runs', 0)}/"
+              f"{st.get('full_unit_runs', 0)}")
+    _dump(f"lm_partition_{arch.replace('.', 'p')}", rec)
+    return rec
+
+
 def _dump(name, obj):
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1, default=float)
 
 
+def _optional_value(flag: str) -> str | None:
+    """Value of ``--flag [value]`` / ``--flag=value`` style arguments."""
+    value = None
+    for i, a in enumerate(sys.argv):
+        if a.startswith(flag + "="):
+            value = a.split("=", 1)[1]
+        elif (a == flag and i + 1 < len(sys.argv)
+              and not sys.argv[i + 1].startswith("-")):
+            value = sys.argv[i + 1]
+    return value
+
+
 def main() -> None:
     print("# benchmark,us_per_call,derived")
     if any(a == "--surrogate" or a.startswith("--surrogate=")
            for a in sys.argv):
-        model = None
-        for i, a in enumerate(sys.argv):
-            if a.startswith("--surrogate="):
-                model = a.split("=", 1)[1]
-            elif (a == "--surrogate" and i + 1 < len(sys.argv)
-                  and not sys.argv[i + 1].startswith("-")):
-                model = sys.argv[i + 1]
-        bench_surrogate(model or "resnet18")
+        bench_surrogate(_optional_value("--surrogate") or "resnet18")
+        return
+    if any(a == "--lm" or a.startswith("--lm=") for a in sys.argv):
+        bench_lm(_optional_value("--lm") or "olmo-1b")
         return
     bench_kernels()
     bench_nsga2()

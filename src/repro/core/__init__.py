@@ -10,7 +10,8 @@
 """
 from repro.core.costmodel import (CostModel, DeviceProfile, LayerInfo,
                                   EYERISS, SIMBA, TPU_V5E, TPU_V5E_LOWVOLT,
-                                  PAPER_DEVICES, POD_TIERS)
+                                  TPU_V5E_MID, TPU_V5E_ECC,
+                                  PAPER_DEVICES, POD_TIERS, POD_TIERS_4)
 from repro.core.eval_engine import (ActivationStore, PopulationEvalEngine,
                                     PrefixEvalEngine, auto_eval_batch_size,
                                     device_memory_budget)
@@ -18,24 +19,27 @@ from repro.core.fault import FaultSpec, FaultContext, PAPER_FAULT_SPEC
 from repro.core.nsga2 import NSGA2Config, nsga2, fast_non_dominated_sort
 from repro.core.objectives import (InferenceAccuracyEvaluator,
                                    SurrogateAccuracyEvaluator, ObjectiveFn,
+                                   make_lm_accuracy_evaluator,
                                    profile_layer_sensitivity)
 from repro.core.partitioner import (AFarePart, CNNPartedLike,
                                     FaultUnawareBaseline, PartitionPlan,
-                                    contiguous_stages)
+                                    contiguous_stages, lm_partitioner)
 from repro.core.runtime import (FaultEnvironment, OnlineReconfigurator,
                                 ReconfigEvent, simulate_deployment)
 
 __all__ = [
     "CostModel", "DeviceProfile", "LayerInfo", "EYERISS", "SIMBA",
-    "TPU_V5E", "TPU_V5E_LOWVOLT", "PAPER_DEVICES", "POD_TIERS",
+    "TPU_V5E", "TPU_V5E_LOWVOLT", "TPU_V5E_MID", "TPU_V5E_ECC",
+    "PAPER_DEVICES", "POD_TIERS", "POD_TIERS_4",
     "FaultSpec", "FaultContext", "PAPER_FAULT_SPEC",
     "NSGA2Config", "nsga2", "fast_non_dominated_sort",
     "PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
     "auto_eval_batch_size", "device_memory_budget",
     "InferenceAccuracyEvaluator", "SurrogateAccuracyEvaluator",
-    "ObjectiveFn", "profile_layer_sensitivity",
+    "ObjectiveFn", "make_lm_accuracy_evaluator",
+    "profile_layer_sensitivity",
     "AFarePart", "CNNPartedLike", "FaultUnawareBaseline", "PartitionPlan",
-    "contiguous_stages",
+    "contiguous_stages", "lm_partitioner",
     "FaultEnvironment", "OnlineReconfigurator", "ReconfigEvent",
     "simulate_deployment",
 ]

@@ -25,7 +25,8 @@ import numpy as np
 __all__ = [
     "DeviceProfile", "LayerInfo", "CostModel",
     "EYERISS", "SIMBA", "TPU_V5E", "TPU_V5E_LOWVOLT",
-    "PAPER_DEVICES", "POD_TIERS",
+    "TPU_V5E_MID", "TPU_V5E_ECC",
+    "PAPER_DEVICES", "POD_TIERS", "POD_TIERS_4",
 ]
 
 
@@ -79,8 +80,20 @@ TPU_V5E_LOWVOLT = DeviceProfile(
     pj_per_byte=1.8, dispatch_s=2e-6, fault_scale=1.0, link_bw=50e9,
     link_pj_per_byte=3.0)
 
+# Intermediate DVFS point and an ECC-heavy reliable tier: the 4-level
+# ladder gives the LM partition searches a real energy/latency/ΔAcc
+# trade surface (2 tiers collapse most fronts to the endpoints) and the
+# staged evaluator >2 device ids to dedup prefixes over.
+TPU_V5E_MID = dataclasses.replace(
+    TPU_V5E_LOWVOLT, name="tpu_v5e_mid", pj_per_mac=0.16, pj_per_byte=2.1,
+    fault_scale=0.5)
+TPU_V5E_ECC = dataclasses.replace(
+    TPU_V5E, name="tpu_v5e_ecc", peak_macs=88e12, pj_per_mac=0.24,
+    fault_scale=0.02)
+
 PAPER_DEVICES = (EYERISS, SIMBA)
 POD_TIERS = (TPU_V5E_LOWVOLT, TPU_V5E)   # tier 0 cheap+faulty, tier 1 reliable
+POD_TIERS_4 = (TPU_V5E_LOWVOLT, TPU_V5E_MID, TPU_V5E, TPU_V5E_ECC)
 
 
 @dataclasses.dataclass(frozen=True)

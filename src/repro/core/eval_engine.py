@@ -95,10 +95,17 @@ def pad_rows(rows: np.ndarray, padded: int) -> np.ndarray:
     return np.concatenate([rows, pad], axis=0)
 
 
-def _nbytes(a) -> int:
-    """Buffer size of a jax/numpy array without forcing a transfer."""
-    return int(np.prod(a.shape)) * a.dtype.itemsize if a.ndim else \
-        a.dtype.itemsize
+def _nbytes(act) -> int:
+    """Buffer bytes of an activation (array or pytree — the LM units
+    thread dicts of hidden state + static token/memory carries) without
+    forcing a transfer."""
+    import jax
+
+    total = 0
+    for a in jax.tree.leaves(act):
+        total += int(np.prod(a.shape)) * a.dtype.itemsize if a.ndim \
+            else a.dtype.itemsize
+    return total
 
 
 class ActivationStore:
@@ -182,14 +189,18 @@ class PrefixEvalEngine:
 
         unit_fns[i](parent_acts, device_ids) -> child_acts | accs
 
-    where ``parent_acts`` is ``[U, ...]`` stacked depth ``i-1``
-    activations (ignored at depth 0 — the callable closes over the
-    calibration batch) and ``device_ids`` is ``[U]`` (the prefixes'
-    last gene).  Depths ``< L-1`` return ``[U, ...]`` activations; the
-    final depth returns the ``[U]`` per-row scalar metric, which is
-    cached exactly like the full engine caches rows.  Per-row results
-    must be independent of batch-mates (vmap semantics), so chunking
-    and padding never change values.
+    where ``parent_acts`` is the stacked depth ``i-1`` activations
+    (ignored at depth 0 — the callable closes over the calibration
+    batch) and ``device_ids`` is ``[U]`` (the prefixes' last gene).
+    Activations may be single ``[U, ...]`` arrays (the CNNs' image
+    batches) or arbitrary pytrees stacked leaf-wise — the LM units
+    carry ``[U,B,S,D]`` hidden states plus static entries (token
+    batches, encoder memory) threaded through as dict fields.  Depths
+    ``< L-1`` return activations; the final depth returns the ``[U]``
+    per-row scalar metric, which is cached exactly like the full
+    engine caches rows.  Per-row results must be independent of
+    batch-mates (vmap semantics), so chunking and padding never change
+    values.
 
     Cost accounting: ``unit_runs`` counts unit executions actually
     performed (including recompute fallbacks after eviction);
@@ -318,7 +329,11 @@ class PrefixEvalEngine:
     def _dispatch_depth(self, i: int, parents: list | None,
                         devs: np.ndarray, final: bool) -> list:
         """Chunked shape-bucketed dispatches of unit ``i``; returns the
-        per-prefix outputs (activations, or scalars at the final depth)."""
+        per-prefix outputs (activation arrays/pytrees, or scalars at the
+        final depth).  Activations are stacked and unstacked leaf-wise,
+        so units may carry arbitrary pytrees (the LM enc-dec units
+        thread token batches and encoder memory as dict entries)."""
+        import jax
         import jax.numpy as jnp
 
         outs: list = []
@@ -330,12 +345,15 @@ class PrefixEvalEngine:
             else:
                 chunk = parents[start:stop]
                 chunk = chunk + [chunk[-1]] * (padded - len(chunk))
-                acts = jnp.stack(chunk)
+                acts = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk)
             out = self.unit_fns[i](acts, jnp.asarray(dev_c, jnp.int32))
             self.dispatches += 1
             n = stop - start
-            outs.extend(np.asarray(out[:n]) if final else
-                        [out[j] for j in range(n)])
+            if final:
+                outs.extend(np.asarray(out[:n]))
+            else:
+                outs.extend(jax.tree.map(lambda a, j=j: a[j], out)
+                            for j in range(n))
         return outs
 
 

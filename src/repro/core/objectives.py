@@ -9,10 +9,13 @@ population).  ΔAcc comes from one of two evaluators:
   * ``InferenceAccuracyEvaluator`` — the paper's method: run the actual
     quantized model on a calibration batch with faults injected on the
     layers mapped to fault-prone devices (fused Pallas path), and
-    measure Top-1 degradation.  Used for the CNN-scale models.
-  * ``SurrogateAccuracyEvaluator`` — scalable path for multi-billion-
-    parameter archs: per-layer fault sensitivity is profiled once via
-    the paper's layer-wise sweep, then ΔAcc(P) ≈ Σ_l sens_l · scale[P_l],
+    measure Top-1 degradation.  Used for the CNN-scale models AND for
+    LM configs small enough to instantiate
+    (:func:`make_lm_accuracy_evaluator`;
+    ``models.graph.lm_eval_strategy`` resolves which those are).
+  * ``SurrogateAccuracyEvaluator`` — scalable path for the 27-480B
+    archs: per-layer fault sensitivity is profiled once via the
+    paper's layer-wise sweep, then ΔAcc(P) ≈ Σ_l sens_l · scale[P_l],
     calibrated against a handful of true evaluations.
 
 Both are deterministic given (partition, seed) so NSGA-II results are
@@ -43,7 +46,9 @@ population axis), which tests/test_eval_engine.py locks in.
 Staged (prefix-reuse) evaluation
 --------------------------------
 When the model exposes the per-unit ``step`` API (the CNNs in
-``repro.models.cnn``), pass ``step_fn`` and the evaluator defaults to
+``repro.models.cnn``; every LM arch via
+``models.transformer.LMStepModel``), pass ``step_fn`` and the evaluator
+defaults to
 ``eval_strategy="staged"``: instead of re-running all L units for every
 unique chromosome, a :class:`~repro.core.eval_engine.PrefixEvalEngine`
 walks the model depth by depth and evaluates each unique *gene prefix*
@@ -58,6 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable
 
 import jax
@@ -73,6 +79,7 @@ from repro.core.fault import FaultSpec
 __all__ = [
     "InferenceAccuracyEvaluator", "SurrogateAccuracyEvaluator",
     "ObjectiveFn", "profile_layer_sensitivity",
+    "make_lm_accuracy_evaluator",
 ]
 
 
@@ -130,11 +137,10 @@ class InferenceAccuracyEvaluator:
         self._built_unit_fns = None
         self._prefix_engine = None
         self.max_store_bytes = max_store_bytes
-        if n_units is None:
-            try:
-                n_units = len(params)
-            except TypeError:
-                n_units = None
+        if n_units is None and isinstance(params, (list, tuple)):
+            # per-unit param lists carry their own unit count; anything
+            # else (e.g. a raw param dict) must pass n_units explicitly
+            n_units = len(params)
         self._n_units = n_units
         if eval_strategy == "auto":
             eval_strategy = "staged" if step_fn is not None else "full"
@@ -183,7 +189,7 @@ class InferenceAccuracyEvaluator:
             self._ensure_prefix_engine()
         self._cache = self._engine._cache      # chromosome -> faulty accuracy
         self.eval_batch_size = eval_batch_size  # resolves "auto" via probe
-        self._clean: float | None = None       # computed lazily (needs n_layers)
+        self._clean: float | None = None       # computed lazily
 
     # -- staged (prefix-reuse) machinery ------------------------------------
     def _ensure_prefix_engine(self) -> PrefixEvalEngine:
@@ -374,11 +380,36 @@ class InferenceAccuracyEvaluator:
         AR = jnp.asarray(self.a_rates_by_device[rows], jnp.float32)
         return np.asarray(self._acc_batch(WR, AR, seed))
 
-    def clean_accuracy(self, n_layers: int) -> float:
+    def _clean_for(self, n: int) -> float:
         if self._clean is None:
-            z = jnp.zeros((n_layers,), jnp.float32)
+            z = jnp.zeros((n,), jnp.float32)
             self._clean = float(self._acc(z, z, jnp.int32(self.base_seed)))
         return self._clean
+
+    def clean_accuracy(self, n_layers: int | None = None) -> float:
+        """Accuracy of the quantized-but-unflipped model (zero rates).
+
+        The layer count is derived from the model's own unit count.
+        The ``n_layers`` parameter is DEPRECATED: it used to be the
+        caller's job, and a mismatched count silently mis-shaped the
+        clean-rate rows.  Passing it now warns, and a value that
+        disagrees with the model's ``n_units`` raises.
+        """
+        if n_layers is not None:
+            warnings.warn(
+                "clean_accuracy(n_layers) is deprecated; the layer count "
+                "is derived from the model's n_units", DeprecationWarning,
+                stacklevel=2)
+            if self._n_units is not None and n_layers != self._n_units:
+                raise ValueError(
+                    f"n_layers={n_layers} does not match the model's "
+                    f"n_units={self._n_units}")
+        n = self._n_units or n_layers
+        if not n:
+            raise ValueError(
+                "unit count unknown: construct the evaluator with "
+                "n_units= (or per-unit list params)")
+        return self._clean_for(n)
 
     def delta_acc(self, P: np.ndarray) -> np.ndarray:
         """P: [N, L] device ids -> ΔAcc per candidate.
@@ -392,12 +423,63 @@ class InferenceAccuracyEvaluator:
         either way.
         """
         P = np.asarray(P)
-        clean = self.clean_accuracy(P.shape[1])
+        if self._n_units is not None and P.shape[1] != self._n_units:
+            raise ValueError(f"population rows have {P.shape[1]} genes "
+                             f"but the model has {self._n_units} units")
+        clean = self._clean_for(self._n_units or P.shape[1])
         if self._strategy == "staged":
             faulty = self._ensure_prefix_engine().evaluate(P)
         else:
             faulty = self._engine.evaluate(P)
         return np.maximum(0.0, clean - faulty)
+
+
+def make_lm_accuracy_evaluator(cfg, params, batch, labels,
+                               spec: FaultSpec, device_fault_scale,
+                               *, base_seed: int = 0,
+                               eval_batch_size: int | str | None = None,
+                               eval_strategy: str = "auto",
+                               max_store_bytes: int | None = 256 << 20,
+                               ) -> InferenceAccuracyEvaluator:
+    """Staged-capable ΔAcc evaluator for any ``configs.ArchConfig`` LM.
+
+    Bridges the unified transformer stack into the same
+    :class:`InferenceAccuracyEvaluator` the CNNs use — there is no
+    CNN/LM split in the evaluation engine.  The model is wrapped in
+    ``models.transformer.LMStepModel`` (per-unit step contract, one
+    unit per partitionable layer in ``models.graph.lm_layer_infos``
+    order: encoder layers first for enc-dec), its stacked params are
+    sliced into the per-unit list the staged engine walks, and
+    ``apply`` — derived from the step composition — serves the
+    full-forward path and the clean-accuracy row.
+
+    Args:
+      cfg: the architecture (use ``cfg.reduced()`` for smoke scale;
+        ``models.graph.lm_eval_strategy`` says whether the full config
+        is small enough to instantiate at all).
+      params: ``transformer.init_lm`` output for ``cfg``.
+      batch: calibration batch dict — ``{"tokens": [B,S]}`` or
+        ``{"embeds": [B,S,D]}``, plus ``{"enc_embeds"}`` for enc-dec.
+      labels: ``[B, S]`` target tokens; ΔAcc is token-level top-1
+        degradation.  Using the clean model's own argmax makes
+        clean_accuracy 1.0 and ΔAcc a pure corruption measure.
+      eval_strategy: "auto" resolves to "staged" (the step API is
+        always available here); "full" selects the whole-forward path
+        — bit-identical, cost only (tests/test_transformer_staged.py).
+
+    ``spec.bits``/``spec.faulty_bits`` pin the fixed-point fault width
+    of the corruption (the paper's INT8-class ``bits=8`` regime is
+    what visibly moves token-level top-1 at smoke scale) — no separate
+    ``layers.set_fault_bits`` call needed.
+    """
+    from repro.models.transformer import LMStepModel
+    sm = LMStepModel(cfg, bits=spec.bits, faulty_bits=spec.faulty_bits)
+    return InferenceAccuracyEvaluator(
+        sm.apply, sm.unit_params(params), batch, labels, spec,
+        device_fault_scale, base_seed=base_seed,
+        eval_batch_size=eval_batch_size, step_fn=sm.step,
+        eval_strategy=eval_strategy, n_units=sm.n_units,
+        max_store_bytes=max_store_bytes)
 
 
 class SurrogateAccuracyEvaluator:

@@ -20,13 +20,14 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.costmodel import CostModel, DeviceProfile, LayerInfo
+from repro.core.costmodel import (CostModel, DeviceProfile, LayerInfo,
+                                  POD_TIERS_4)
 from repro.core.fault import FaultSpec
 from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
-from repro.core.objectives import ObjectiveFn
+from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
 
 __all__ = ["PartitionPlan", "AFarePart", "FaultUnawareBaseline",
-           "CNNPartedLike", "contiguous_stages"]
+           "CNNPartedLike", "contiguous_stages", "lm_partitioner"]
 
 
 @dataclasses.dataclass
@@ -166,3 +167,38 @@ class CNNPartedLike(_BasePartitioner):
     latency_weight = 1.0
     energy_weight = 1.0
     select_policy = "latency_energy"
+
+
+def lm_partitioner(cfg, acc_evaluator=None, *,
+                   devices: tuple[DeviceProfile, ...] = POD_TIERS_4,
+                   seq: int = 4096, fault_spec: FaultSpec = FaultSpec(),
+                   nsga2_config: NSGA2Config = NSGA2Config(),
+                   batch: int = 1,
+                   eval_batch_size: int | str | None = None,
+                   eval_strategy: str | None = None) -> AFarePart:
+    """:class:`AFarePart` over an LM config's layer graph — one call,
+    no CNN/LM split.
+
+    ``acc_evaluator`` selects the ΔAcc source:
+
+      * the staged evaluator from
+        ``core.objectives.make_lm_accuracy_evaluator`` for configs
+        ``models.graph.lm_eval_strategy`` resolves to ``"staged"``
+        (small enough to instantiate — the 1-4B zoo at the reference
+        budget).  ``eval_strategy`` then picks staged prefix-reuse
+        (the default) vs the full-forward path, bit-identically;
+      * None falls back to the calibrated sensitivity surrogate over
+        the same layer infos — the cost-model-only path the 27-480B
+        configs use.  Calibrate it against a handful of true
+        evaluations when any instantiable model is available
+        (``SurrogateAccuracyEvaluator.calibrate``).
+    """
+    from repro.models.graph import lm_layer_infos
+    layers = lm_layer_infos(cfg, seq=seq)
+    if acc_evaluator is None:
+        acc_evaluator = SurrogateAccuracyEvaluator(
+            CostModel(layers, devices, batch=batch))
+    return AFarePart(layers, devices, fault_spec=fault_spec,
+                     acc_evaluator=acc_evaluator, nsga2_config=nsga2_config,
+                     batch=batch, eval_batch_size=eval_batch_size,
+                     eval_strategy=eval_strategy)

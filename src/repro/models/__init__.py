@@ -1,12 +1,12 @@
 from repro.models import cnn, graph, layers, transformer
 from repro.models.cnn import CNN_MODELS, AlexNet, ResNet18, SqueezeNet
-from repro.models.graph import lm_layer_infos
-from repro.models.transformer import (decode_step, forward, init_cache,
-                                      init_lm, prefill)
+from repro.models.graph import lm_eval_strategy, lm_layer_infos
+from repro.models.transformer import (LMStepModel, decode_step, forward,
+                                      init_cache, init_lm, prefill)
 
 __all__ = [
     "cnn", "graph", "layers", "transformer",
     "CNN_MODELS", "AlexNet", "ResNet18", "SqueezeNet",
-    "lm_layer_infos", "decode_step", "forward", "init_cache", "init_lm",
-    "prefill",
+    "lm_eval_strategy", "lm_layer_infos", "LMStepModel",
+    "decode_step", "forward", "init_cache", "init_lm", "prefill",
 ]

@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import LayerInfo
 
-__all__ = ["lm_layer_infos", "bytes_per_param"]
+__all__ = ["lm_layer_infos", "bytes_per_param", "lm_eval_strategy"]
 
 
 def bytes_per_param(cfg: ArchConfig) -> int:
@@ -103,6 +103,34 @@ def lm_layer_infos(cfg: ArchConfig, seq: int = 4096) -> list[LayerInfo]:
             act_bytes, act_bytes, params=wp,
             sensitivity=_prior(i, cfg.n_layers)))
     return infos
+
+
+def lm_eval_strategy(cfg: ArchConfig, budget: int | None = None,
+                     headroom: float = 1.5) -> str:
+    """Resolve the ΔAcc evaluation path for an LM config.
+
+    ``"staged"``: the arch is small enough to instantiate on this host,
+    so the true fault-injected staged (prefix-reuse) evaluator runs in
+    the NSGA-II loop (``core.objectives.make_lm_accuracy_evaluator``).
+    ``"surrogate"``: cost-model scale — the params would not fit, so
+    ΔAcc comes from the calibrated sensitivity surrogate over these
+    layer infos instead.
+
+    The bar is memory, not an arch list: resident weights
+    (``param_count() x bytes/param``) times ``headroom`` (the staged
+    fault path materialises one unit's corrupted copy at a time, plus
+    activations) must fit the evaluation budget
+    (``core.eval_engine.device_memory_budget``; env
+    ``REPRO_EVAL_MEM_BUDGET`` overrides).  At the 16 GiB reference
+    budget the 1-4B zoo (olmo-1b, starcoder2-3b, recurrentgemma-2b,
+    mamba2-2.7b, seamless) resolves staged and the 27-480B configs
+    resolve surrogate — tests/test_graph_roofline.py pins that split.
+    """
+    from repro.core.eval_engine import device_memory_budget
+    if budget is None:
+        budget = device_memory_budget()
+    need = cfg.param_count() * bytes_per_param(cfg) * headroom
+    return "staged" if need <= budget else "surrogate"
 
 
 def _prior(i: int, n: int) -> float:

@@ -13,6 +13,13 @@ Fault injection (the paper's technique) enters through ``fault``: a
 ``fault=None`` the jaxpr contains zero fault ops — the clean train/serve
 paths pay nothing.
 
+Every block is an *addressable unit*: the scan bodies iterate the same
+``_block_fwd`` / ``_enc_block_fwd`` / ``_dec_block_fwd`` functions that
+:class:`LMStepModel` exposes through the per-unit
+``step(i, params_i, x, wr, ar, seed)`` contract (mirroring
+``models.cnn._StepModel``), so the staged prefix-reuse evaluator and the
+whole-model forward share one definition of the math.
+
 Caches:
   attn global      k/v [B, S_max, Hkv, Dh] + pos [B, S_max]
   local / swa      ring buffer of `window` slots (bounded memory)
@@ -140,15 +147,19 @@ def _rate_for(fault, lidx):
 # Block forward (full-sequence; used by train and prefill)
 # ==========================================================================
 def _block_fwd(cfg: ArchConfig, kind: str, p: Params, x, positions, *,
-               fault_rates=None, build_cache: bool = False,
+               fault_rates=None, fault_bits=None, build_cache: bool = False,
                kv_chunk: int = 1024, ssd_chunk: int = 256,
                unroll: bool = False, seq_axis: str | None = None):
-    """Returns (x_out, cache_entry_or_None)."""
+    """Returns (x_out, cache_entry_or_None).  ``fault_bits`` is an
+    optional (bits, faulty_bits) fixed-point width override for the
+    corruption; None = the module defaults in ``layers``."""
     x = L._seq_wsc(x)
     wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
+    bits, lsbs = fault_bits if fault_bits is not None else (None, None)
     if wr is not None:
-        p = L.corrupt_params(p, wr, seed)
-        x = L.maybe_corrupt(x, ar, seed + 1)
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+    if ar is not None:
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
     cache = None
     window = None
     softcap = cfg.logit_softcap or 0.0
@@ -219,29 +230,69 @@ def unembed(cfg: ArchConfig, params: Params, x: jax.Array):
     return logits
 
 
+def _enc_block_fwd(cfg: ArchConfig, p: Params, x, positions, *,
+                   fault_rates=None, fault_bits=None):
+    """One encoder block (seamless): bidirectional self-attn + MLP.
+
+    The addressable unit the scan in :func:`_encode` iterates and
+    ``LMStepModel.step`` exposes — one definition of the math for both.
+    Bidirectional attention is implemented as causal=False via
+    memory=self.
+    """
+    wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
+    bits, lsbs = fault_bits if fault_bits is not None else (None, None)
+    if wr is not None:
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+    if ar is not None:
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
+    h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+    a = L.attention_fwd(p["attn"], h, positions, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                        rope_theta=cfg.rope_theta, memory=h,
+                        memory_pos=positions)
+    x = x + a
+    h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+    return x + L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+
+
+def _dec_block_fwd(cfg: ArchConfig, p: Params, x, positions, memory,
+                   mem_pos, *, fault_rates=None, fault_bits=None,
+                   kv_chunk: int = 1024):
+    """One enc-dec decoder block: causal self-attn + cross-attn + MLP.
+
+    Shared by the full-sequence decoder scan in :func:`forward` and the
+    per-unit step API, like :func:`_enc_block_fwd`.
+    """
+    wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
+    bits, lsbs = fault_bits if fault_bits is not None else (None, None)
+    if wr is not None:
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+    if ar is not None:
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
+    h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
+    x = x + L.attention_fwd(
+        p["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        rope_theta=cfg.rope_theta, kv_chunk=kv_chunk)
+    h = L.norm_fwd(p["ln_x"], x, cfg.norm_kind)
+    x = x + L.attention_fwd(
+        p["xattn"], h, positions, n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        rope_theta=cfg.rope_theta, memory=memory, memory_pos=mem_pos)
+    h = L.norm_fwd(p["ln2"], x, cfg.norm_kind)
+    return x + L.mlp_fwd(p["mlp"], h, cfg.act_fn)
+
+
 def _encode(cfg: ArchConfig, params: Params, enc_embeds, fault=None,
             unroll: bool = False):
     """Encoder stack (seamless): bidirectional self-attention."""
     S = enc_embeds.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
 
-    def body(carry, xs):
+    def body(carry, gp):
         x, g = carry
-        gp = xs
         fr = _rate_for(fault, g) if fault is not None else None
-        # bidirectional: implemented as causal=False via memory=self
-        wr, ar, seed = fr if fr is not None else (None,) * 3
-        if wr is not None:
-            gp = L.corrupt_params(gp, wr, seed)
-            x = L.maybe_corrupt(x, ar, seed + 1)
-        h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
-        a = L.attention_fwd(gp["attn"], h, positions, n_heads=cfg.n_heads,
-                            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
-                            rope_theta=cfg.rope_theta, memory=h,
-                            memory_pos=positions)
-        x = x + a
-        h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
-        x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+        x = _enc_block_fwd(cfg, gp, x, positions, fault_rates=fr)
         return (x, g + 1), None
 
     (x, _), _ = jax.lax.scan(body, (enc_embeds, 0), params["enc_groups"],
@@ -274,23 +325,10 @@ def forward(params: Params, cfg: ArchConfig, batch: dict, *, fault=None,
 
         def dec_body(carry, gp):
             x, g = carry
-            lidx = cfg.n_enc_layers + g
-            wr, ar, seed = _rate_for(fault, lidx)
-            if wr is not None:
-                gp = L.corrupt_params(gp, wr, seed)
-                x = L.maybe_corrupt(x, ar, seed + 1)
-            h = L.norm_fwd(gp["ln1"], x, cfg.norm_kind)
-            x = x + L.attention_fwd(
-                gp["attn"], h, positions, n_heads=cfg.n_heads,
-                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
-                rope_theta=cfg.rope_theta, kv_chunk=kv_chunk)
-            h = L.norm_fwd(gp["ln_x"], x, cfg.norm_kind)
-            x = x + L.attention_fwd(
-                gp["xattn"], h, positions, n_heads=cfg.n_heads,
-                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
-                rope_theta=cfg.rope_theta, memory=memory, memory_pos=mem_pos)
-            h = L.norm_fwd(gp["ln2"], x, cfg.norm_kind)
-            x = x + L.mlp_fwd(gp["mlp"], h, cfg.act_fn)
+            fr = _rate_for(fault, cfg.n_enc_layers + g) \
+                if fault is not None else None
+            x = _dec_block_fwd(cfg, gp, x, positions, memory, mem_pos,
+                               fault_rates=fr, kv_chunk=kv_chunk)
             return (x, g + 1), None
 
         if remat:
@@ -322,6 +360,205 @@ def forward(params: Params, cfg: ArchConfig, batch: dict, *, fault=None,
         body = jax.checkpoint(body)
     (x, _), _ = jax.lax.scan(body, (x, 0), params["groups"], unroll=unroll)
     return unembed(cfg, params, x)
+
+
+# ==========================================================================
+# Per-unit step API (staged prefix-reuse evaluation)
+# ==========================================================================
+def _unit_rates(w_rates, a_rates, seed, i):
+    """Per-unit (wr, ar, seed) slice of the vector fault contract — the
+    same derivation ``models.cnn._rates`` and :func:`_rate_for` use
+    (unit seed = base + 7919·i), so step composition and the scanned
+    ``forward`` corrupt identically."""
+    if w_rates is None and a_rates is None:
+        return None, None, None
+    return (None if w_rates is None else w_rates[i],
+            None if a_rates is None else a_rates[i],
+            seed + 7919 * i)
+
+
+def _embed_batch(cfg: ArchConfig, embed, batch):
+    """Embed the input batch ({"tokens"} via the table, stub-frontend
+    {"embeds"} as-is) — the step-API twin of :func:`embed_tokens`.
+    The embedding itself is never fault-corrupted, matching forward."""
+    if "tokens" in batch:
+        e = embed[batch["tokens"]]
+        return e * jnp.asarray(np.sqrt(cfg.d_model), e.dtype)
+    return batch["embeds"].astype(cfg.jdtype)
+
+
+def _unembed_unit(cfg: ArchConfig, p: Params, x):
+    """Final-norm + head of the last unit (twin of :func:`unembed`;
+    ``p["head"]`` is the embedding table when embeddings are tied)."""
+    x = L.norm_fwd(p["final_norm"], x, cfg.norm_kind)
+    head = p["head"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ head
+    if LOGITS_SPEC is not None:
+        logits = jax.lax.with_sharding_constraint(logits, LOGITS_SPEC)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+class LMStepModel:
+    """Addressable per-unit view of the LM stack, mirroring
+    ``models.cnn._StepModel``.
+
+    Unit *i* is partitionable layer *i* in the order the fault-rate
+    vectors, ``models.graph.lm_layer_infos`` and the partitioner index
+    layers: encoder layers first for enc-dec, then decoder layers;
+    ``block_pattern`` cyclic otherwise.  Composing the units IS the
+    forward pass: ``apply`` is derived from ``step`` exactly like the
+    CNNs derive theirs, and each step runs the same ``*_block_fwd``
+    unit function the scan-based :func:`forward` iterates — so staged
+    and whole-model execution cannot drift apart
+    (tests/test_transformer_staged.py locks both equalities in).
+
+    Boundary glue follows the CNN convention (glue belongs to the unit
+    computing into it): unit 0 owns the never-corrupted input
+    embedding, the final unit owns final-norm + unembed; for enc-dec
+    the last encoder unit owns the encoder final norm and the first
+    decoder unit owns the decoder embedding.  Fault injection targets
+    each unit's ``block`` subtree + input activation only — the same
+    subtree, in the same leaf order, that :func:`_rate_for` corruption
+    sees inside the scan, so corruption is bit-identical.
+
+    Activations between units are pytrees: plain ``[B,S,D]`` hidden
+    states for decoder-only stacks; enc-dec threads the (static)
+    decoder input batch through the encoder units and the encoder
+    memory through the decoder units as extra dict entries.  The
+    prefix-reuse engine stores/stacks pytrees transparently.
+
+    ``bits``/``faulty_bits`` pin the fixed-point fault width for this
+    model's corruption (e.g. from ``FaultSpec.bits``); None inherits
+    the ``layers`` module defaults at trace time.
+    """
+
+    def __init__(self, cfg: ArchConfig, bits: int | None = None,
+                 faulty_bits: int | None = None):
+        self.cfg = cfg
+        self.fault_bits = None if bits is None and faulty_bits is None \
+            else (bits, faulty_bits)
+        self.n_units = (cfg.n_enc_layers + cfg.n_layers) if cfg.is_encdec \
+            else cfg.n_layers
+
+    # -- structure ----------------------------------------------------------
+    def unit_kind(self, i: int) -> str:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return "enc" if i < cfg.n_enc_layers else "dec"
+        return cfg.block_pattern[i % len(cfg.block_pattern)]
+
+    def unit_params(self, params: Params) -> list[Params]:
+        """Slice ``init_lm``'s stacked tree into per-unit param trees.
+
+        Each unit holds its block under ``"block"`` (the subtree fault
+        injection corrupts) plus boundary params under separate keys
+        (``embed`` / ``enc_norm`` / ``final_norm`` + ``head``) that
+        stay clean.
+        """
+        cfg = self.cfg
+        units: list[Params] = []
+        if cfg.is_encdec:
+            for i in range(cfg.n_enc_layers):
+                u = {"block": jax.tree.map(lambda t, i=i: t[i],
+                                           params["enc_groups"])}
+                if i == cfg.n_enc_layers - 1:
+                    u["enc_norm"] = params["enc_norm"]
+                units.append(u)
+            for j in range(cfg.n_layers):
+                u = {"block": jax.tree.map(lambda t, j=j: t[j],
+                                           params["groups"])}
+                if j == 0:
+                    u["embed"] = params["embed"]
+                if j == cfg.n_layers - 1:
+                    self._add_head(u, params)
+                units.append(u)
+            return units
+        P = len(cfg.block_pattern)
+        for i in range(self.n_units):
+            g, s = divmod(i, P)
+            u = {"block": jax.tree.map(lambda t, g=g: t[g],
+                                       params["groups"][f"b{s}"])}
+            if i == 0:
+                u["embed"] = params["embed"]
+            if i == self.n_units - 1:
+                self._add_head(u, params)
+            units.append(u)
+        return units
+
+    def _add_head(self, u: Params, params: Params):
+        u["final_norm"] = params["final_norm"]
+        u["head"] = params["embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+
+    # -- per-unit forward ---------------------------------------------------
+    def step(self, i: int, p: Params, x, wr=None, ar=None, seed=0):
+        """Unit *i*'s fault injection + compute + boundary glue.
+
+        ``x`` at unit 0 is the model's batch dict ({"tokens"} or
+        {"embeds"}, plus {"enc_embeds"} for enc-dec); the final unit
+        returns logits.  Scalar ``wr``/``ar`` may independently be
+        None to skip that corruption (the CNN step contract).
+        """
+        cfg = self.cfg
+        fr = None if (wr is None and ar is None) else (wr, ar, seed)
+        if cfg.is_encdec:
+            return self._step_encdec(i, p, x, fr)
+        if i == 0:
+            x = _embed_batch(cfg, p["embed"], x)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        x, _ = _block_fwd(cfg, kind, p["block"], x, positions,
+                          fault_rates=fr, fault_bits=self.fault_bits)
+        if i == self.n_units - 1:
+            x = _unembed_unit(cfg, p, x)
+        return x
+
+    @staticmethod
+    def _dec_input(batch) -> dict:
+        """The decoder-side input entries of an enc-dec batch/carry —
+        {"tokens"} or the stub-frontend {"embeds"}, whichever exists."""
+        return {k: batch[k] for k in ("tokens", "embeds") if k in batch}
+
+    def _step_encdec(self, i: int, p: Params, x, fr):
+        cfg = self.cfg
+        ne = cfg.n_enc_layers
+        if i < ne:
+            if i == 0:
+                x = {"enc": x["enc_embeds"], **self._dec_input(x)}
+            enc = x["enc"]
+            positions = jnp.arange(enc.shape[1], dtype=jnp.int32)
+            enc = _enc_block_fwd(cfg, p["block"], enc, positions,
+                                 fault_rates=fr,
+                                 fault_bits=self.fault_bits)
+            if i == ne - 1:
+                mem = L.norm_fwd(p["enc_norm"], enc, cfg.norm_kind)
+                return {"mem": mem, **self._dec_input(x)}
+            return {"enc": enc, **self._dec_input(x)}
+        j = i - ne
+        if j == 0:
+            x = {"x": _embed_batch(cfg, p["embed"], self._dec_input(x)),
+                 "mem": x["mem"]}
+        h, mem = x["x"], x["mem"]
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+        mem_pos = jnp.arange(mem.shape[1], dtype=jnp.int32)
+        h = _dec_block_fwd(cfg, p["block"], h, positions, mem, mem_pos,
+                           fault_rates=fr, fault_bits=self.fault_bits)
+        if j == cfg.n_layers - 1:
+            return _unembed_unit(cfg, p, h)
+        return {"x": h, "mem": mem}
+
+    # -- whole-model forward derived from the steps -------------------------
+    def apply(self, params: list[Params], x, w_rates=None, a_rates=None,
+              seed=0):
+        """Ordered composition of the units — per-UNIT traced fault
+        rate vectors, the same ``apply_fn`` contract the CNN models
+        fulfil for ``InferenceAccuracyEvaluator``."""
+        for i in range(self.n_units):
+            x = self.step(i, params[i], x,
+                          *_unit_rates(w_rates, a_rates, seed, i))
+        return x
 
 
 # ==========================================================================

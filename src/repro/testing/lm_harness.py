@@ -1,0 +1,37 @@
+"""Shared LM staged-evaluation harness setup.
+
+One definition of the calibration fixture the differential tests
+(tests/test_transformer_staged.py) and the benchmarks
+(benchmarks/eval_engine.py --lm, benchmarks/run.py --lm) all build:
+model params, a calibration batch of the right shape for the config
+(tokens / enc_embeds), and *self-labels* — the clean model's own argmax
+— so clean accuracy is ~1 and ΔAcc measures pure corruption (random
+labels pin every accuracy at chance, making staged-vs-full comparisons
+vacuous).  Keeping it here stops the three copies from silently
+desynchronizing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["lm_calibration_setup"]
+
+
+def lm_calibration_setup(cfg, B: int = 2, S: int = 16, seed: int = 7,
+                         param_key: int = 0):
+    """Returns ``(params, batch, labels)`` for ``cfg`` (already reduced
+    by the caller if smoke scale is wanted)."""
+    from repro.models.transformer import forward, init_lm
+
+    rng = np.random.default_rng(seed)
+    params = init_lm(cfg, jax.random.PRNGKey(param_key))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, max(1, S // cfg.enc_ratio),
+                                 cfg.d_model)), jnp.float32)
+    labels = jnp.argmax(forward(params, cfg, batch), -1)
+    return params, batch, labels

@@ -16,7 +16,7 @@ def loop_delta_acc(ev, P: np.ndarray) -> np.ndarray:
     InferenceAccuracyEvaluator, P an [N, L] device-id matrix."""
     import jax.numpy as jnp
     P = np.asarray(P)
-    clean = ev.clean_accuracy(P.shape[1])
+    clean = ev.clean_accuracy()
     out = np.empty(len(P))
     for i, row in enumerate(P):
         wr = jnp.asarray(ev.w_rates_by_device[row], jnp.float32)

@@ -6,7 +6,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
                                    collective_bytes_from_hlo, model_flops,
                                    roofline_terms)
-from repro.models.graph import lm_layer_infos
+from repro.models.graph import lm_eval_strategy, lm_layer_infos
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
@@ -29,6 +29,100 @@ def test_layer_graph_weights_track_param_count():
         embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
         total = cfg.param_count()
         assert abs(layer_params - (total - embed)) / total < 0.1, arch
+
+
+def test_lm_layer_infos_moe_pinned_by_hand():
+    """Differential pin of the MoE branch of ``lm_layer_infos`` (and
+    ``_attn_macs``'s SWA arm) against an independent hand derivation —
+    mixtral-8x7b layer 0 at seq 4096.  Every quantity below is written
+    out from the config numbers, not from the code under test."""
+    seq = 4096
+    d, hd, hq, hkv = 4096, 128, 32, 8          # mixtral dims
+    li = lm_layer_infos(get_config("mixtral-8x7b"), seq=seq)[0]
+
+    # attention: qkv + output projections, then scores over the full
+    # SWA window (window == seq here, no causal halving for windowed)
+    proj = seq * d * hd * (hq + 2 * hkv) + seq * hq * hd * d
+    score = seq * hq * hd * 4096 * 2           # window = 4096
+    # MoE: top-2 of 8 experts, gated 3-matrix experts of 14336, +router
+    moe_macs = seq * 2 * 3 * d * 14336 + seq * d * 8
+    assert li.macs == pytest.approx((proj + score + moe_macs) / seq,
+                                    rel=1e-12)
+
+    attn_wp = d * hd * (hq + 2 * hkv) + hq * hd * d
+    wp = attn_wp + 8 * 3 * d * 14336 + d * 8
+    assert li.params == wp
+    assert li.weight_bytes == wp * 2           # bf16
+    assert li.act_in_bytes == seq * d * 2
+
+
+def test_lm_layer_infos_moe_dense_residual_pinned_by_hand():
+    """arctic-480b: the dense-residual MoE branch — a parallel 3-matrix
+    dense FFN of width 4864 rides beside the 128-expert top-2 MoE."""
+    seq = 4096
+    d, hd, hq, hkv = 7168, 128, 56, 8
+    li = lm_layer_infos(get_config("arctic-480b"), seq=seq)[0]
+
+    proj = seq * d * hd * (hq + 2 * hkv) + seq * hq * hd * d
+    score = seq * hq * hd * (seq / 2) * 2      # global: causal ~seq/2
+    moe_macs = seq * 2 * 3 * d * 4864 + seq * d * 128
+    dense_macs = seq * 3 * d * 4864            # the residual FFN
+    assert li.macs == pytest.approx(
+        (proj + score + moe_macs + dense_macs) / seq, rel=1e-12)
+
+    attn_wp = d * hd * (hq + 2 * hkv) + hq * hd * d
+    wp = attn_wp + 128 * 3 * d * 4864 + d * 128 + 3 * d * 4864
+    assert li.params == wp
+    assert li.weight_bytes == wp * 2
+
+
+def test_lm_layer_infos_encdec_pinned_by_hand():
+    """seamless-m4t-medium: the enc-dec arm — encoder layers first
+    (memory length seq/8), decoders carry self+cross attention."""
+    seq = 4096
+    d, hd, h = 1024, 64, 16                    # seamless dims (kv=16)
+    cfg = get_config("seamless-m4t-medium")
+    infos = lm_layer_infos(cfg, seq=seq)
+    assert len(infos) == 24 and infos[0].name == "enc0" \
+        and infos[12].name == "dec0"
+
+    attn_wp = d * hd * (h + 2 * h) + h * hd * d
+    mlp = 2 * d * 4096                         # relu MLP: not gated
+    enc_seq = seq // 8
+
+    enc = infos[0]
+    proj = enc_seq * d * hd * (h + 2 * h) + enc_seq * h * hd * d
+    score = enc_seq * h * hd * (enc_seq / 2) * 2
+    assert enc.macs == pytest.approx(
+        (proj + score + enc_seq * mlp) / seq, rel=1e-12)
+    assert enc.params == attn_wp + mlp
+    assert enc.weight_bytes == (attn_wp + mlp) * 2
+    assert enc.act_out_bytes == enc_seq * d * 2
+
+    dec = infos[12]
+    proj = seq * d * hd * (h + 2 * h) + seq * h * hd * d
+    score = seq * h * hd * (seq / 2) * 2
+    assert dec.macs == pytest.approx(
+        (2 * (proj + score) + seq * mlp) / seq, rel=1e-12)
+    assert dec.params == 2 * attn_wp + mlp
+    assert dec.act_in_bytes == seq * d * 2
+
+
+def test_lm_eval_strategy_split_at_reference_budget():
+    """The staged/surrogate policy split at the 16 GiB reference
+    budget: the instantiable 1-4B zoo runs the true staged evaluator,
+    the 27-480B configs stay on the cost-model surrogate."""
+    budget = 16 << 30
+    resolved = {a: lm_eval_strategy(get_config(a), budget=budget)
+                for a in ARCH_IDS}
+    staged = {a for a, s in resolved.items() if s == "staged"}
+    assert {"olmo-1b", "starcoder2-3b", "recurrentgemma-2b",
+            "mamba2-2.7b", "seamless-m4t-medium"} <= staged
+    assert staged.isdisjoint({"gemma2-27b", "deepseek-coder-33b",
+                              "mixtral-8x7b", "arctic-480b"})
+    # a tiny budget forces everything to the surrogate
+    assert all(lm_eval_strategy(get_config(a), budget=1) == "surrogate"
+               for a in ARCH_IDS)
 
 
 def test_collective_bytes_parser():

@@ -1,0 +1,123 @@
+"""Property test: PrefixEvalEngine's LRU activation store.
+
+Under random eviction budgets, random chunk sizes and random
+shared-prefix populations, eviction only ever falls back to recompute —
+the returned metrics NEVER change (the store is a performance knob, not
+a correctness one).  Runs against real hypothesis when installed, else
+``repro.testing.hypothesis_fallback`` (tests/conftest.py installs it).
+
+The unit stack is synthetic exact-integer float arithmetic (all values
+stay far below 2^24), so the reference composition is bit-exact in
+float32 and the equality assertions are meaningful, while each engine
+dispatch costs microseconds instead of a model forward.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.eval_engine import PrefixEvalEngine
+
+L, D, K = 5, 3, 4       # units, devices, activation width
+
+
+def _unit_fns():
+    import jax.numpy as jnp
+
+    def depth0(acts, devs):
+        return devs[:, None].astype(jnp.float32) \
+            + jnp.arange(K, dtype=jnp.float32)
+
+    fns = [depth0]
+    for i in range(1, L - 1):
+        fns.append(lambda acts, devs, i=i:
+                   acts * (i + 2) + devs[:, None].astype(acts.dtype))
+    fns.append(lambda acts, devs:
+               (acts * (L + 1) + devs[:, None].astype(acts.dtype))
+               .sum(axis=1))
+    return fns
+
+
+def _ref_row(row) -> float:
+    act = row[0] + np.arange(K, dtype=np.float64)
+    for i in range(1, L - 1):
+        act = act * (i + 2) + row[i]
+    return float((act * (L + 1) + row[-1]).sum())
+
+
+def _shared_prefix_population(rng, pool, n):
+    """Rows drawn from a small base pool with random suffix mutations:
+    guarantees the prefix sharing the engine dedups over."""
+    P = pool[rng.integers(0, len(pool), size=n)].copy()
+    for r in range(n):
+        cut = int(rng.integers(0, L + 1))
+        P[r, cut:] = rng.integers(0, D, size=L - cut)
+    return P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 400), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([None, 1, 2, 3]), st.integers(1, 6))
+def test_eviction_and_chunking_never_change_results(max_bytes, seed, ebs,
+                                                    rounds):
+    rng = np.random.default_rng(seed)
+    eng = PrefixEvalEngine(_unit_fns(), L, eval_batch_size=ebs,
+                           max_store_bytes=max_bytes)
+    pool = rng.integers(0, D, size=(3, L))
+    for _ in range(rounds):
+        P = _shared_prefix_population(rng, pool, int(rng.integers(1, 9)))
+        got = eng.evaluate(P)
+        want = np.array([_ref_row(r) for r in P])
+        np.testing.assert_array_equal(got, want)
+    stats = eng.stats()
+    # cost accounting stays coherent under eviction/recompute churn
+    assert stats["unit_runs"] <= stats["rows_evaluated"] * L
+    assert stats["unit_runs"] >= stats["recomputes"]
+
+
+def test_tiny_budget_evicts_everything_results_unchanged():
+    """A 1-byte budget evicts each depth's activations the moment the
+    next depth's puts land; every walk recomputes from scratch via the
+    normal todo path — slower, bit-identical."""
+    eng = PrefixEvalEngine(_unit_fns(), L, max_store_bytes=1)
+    rng = np.random.default_rng(0)
+    P1 = rng.integers(0, D, size=(6, L))
+    np.testing.assert_array_equal(eng.evaluate(P1),
+                                  [_ref_row(r) for r in P1])
+    P2 = P1.copy()
+    P2[:, -1] = (P2[:, -1] + 1) % D      # shares every deep prefix
+    np.testing.assert_array_equal(eng.evaluate(P2),
+                                  [_ref_row(r) for r in P2])
+    assert eng.store.evictions > 0
+    assert eng.recomputes == 0           # todo re-runs, no _ensure_act miss
+
+
+def test_evicted_hit_goes_through_recompute_chain():
+    """Directed trigger of the ``_ensure_act`` fallback: a prefix that
+    counts as a HIT at depth *i* (so it is not re-dispatched there) can
+    be LRU-evicted by that same depth's fresh puts before depth *i+1*
+    fetches it as a parent — the engine must recompute the chain, not
+    fail or change values."""
+    eng = PrefixEvalEngine(_unit_fns(), L, max_store_bytes=None)
+    A = np.zeros((1, L), np.int64)
+    np.testing.assert_array_equal(eng.evaluate(A), [_ref_row(A[0])])
+    # shrink the budget to one activation (a runtime budget shrink),
+    # then evaluate rows that (a) hit A's depth-0 prefix and (b) push
+    # fresh depth-0 prefixes whose puts evict it
+    eng.store.max_bytes = K * 4
+    P = np.array([[0, 1, 1, 1, 1],
+                  [1, 1, 1, 1, 1],
+                  [2, 1, 1, 1, 1]])
+    np.testing.assert_array_equal(eng.evaluate(P),
+                                  [_ref_row(r) for r in P])
+    assert eng.recomputes > 0
+    assert eng.store.evictions > 0
+
+
+def test_unbounded_store_never_evicts_or_recomputes():
+    eng = PrefixEvalEngine(_unit_fns(), L, max_store_bytes=None)
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        P = rng.integers(0, D, size=(5, L))
+        np.testing.assert_array_equal(eng.evaluate(P),
+                                      [_ref_row(r) for r in P])
+    assert eng.store.evictions == 0
+    assert eng.recomputes == 0

@@ -1,0 +1,286 @@
+"""Differential harness: staged LM evaluation vs full forward.
+
+The transformer twin of tests/test_staged_eval.py, locking in the
+contracts ISSUE 3 ships:
+
+  * ``LMStepModel.apply`` is the ordered composition of ``step`` (the
+    CNN `_StepModel` derivation) and agrees with the scan-based
+    ``transformer.forward`` — same math, different compilation, so the
+    forward check is allclose while every evaluator-level check below
+    is BITWISE;
+  * staged ``delta_acc`` == full-forward ``delta_acc``, bit for bit,
+    across the block-pattern zoo — dense GQA attention (starcoder2),
+    RG-LRU + local hybrid (recurrentgemma), SSD (mamba2), and the
+    seamless encoder-decoder — for faulted and zero-rate (clean) fault
+    specs, chunked and unchunked;
+  * per-generation unit runs scale with unique gene *prefixes*, and a
+    shared-prefix population replay avoids >= 30 % of the unit runs the
+    full path would execute (the acceptance-criterion guard);
+  * LRU eviction of (pytree) LM activations degrades to recompute,
+    never to wrong results;
+  * ``clean_accuracy`` derives the layer count from the model's
+    ``n_units`` (the deprecated argument warns, a mismatch raises).
+
+Fault regime: the evaluators run the paper's INT8-class widths via
+``FaultSpec(bits=8)`` (threaded through ``make_lm_accuracy_evaluator``)
+— the default 16-bit/4-LSB regime is too mild to move token-level
+top-1 on the reduced configs, which would make the harness vacuous.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import FaultSpec
+from repro.core.objectives import make_lm_accuracy_evaluator
+from repro.models.transformer import LMStepModel, _unit_rates, forward
+from repro.testing.lm_harness import lm_calibration_setup
+from repro.testing.reference import loop_delta_acc
+
+# dense attn / rglru+local / ssd / enc-dec
+ARCHS = ["starcoder2-3b", "recurrentgemma-2b", "mamba2-2.7b",
+         "seamless-m4t-medium"]
+SCALE = np.array([1.0, 0.25])
+SPEC = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2, bits=8)
+SPEC_CLEAN = FaultSpec(weight_fault_rate=0.0, act_fault_rate=0.0, bits=8)
+B, S = 2, 8
+
+_SETUPS: dict = {}
+_REFS: dict = {}
+
+
+def _setup(arch):
+    """(cfg, step model, per-unit params, batch, self-labels) per arch,
+    cached at module scope: evaluator builds dominate this module's
+    runtime."""
+    if arch not in _SETUPS:
+        cfg = get_config(arch).reduced()
+        params, batch, labels = lm_calibration_setup(cfg, B=B, S=S)
+        sm = LMStepModel(cfg)
+        _SETUPS[arch] = (cfg, sm, sm.unit_params(params), params, batch,
+                         labels)
+    return _SETUPS[arch]
+
+
+_EVS: dict = {}
+
+
+def _evaluator(arch, staged, spec=SPEC, **kw):
+    cfg, sm, units, params, batch, labels = _setup(arch)
+    key = (arch, staged, spec.weight_fault_rate, tuple(sorted(kw)))
+    if key not in _EVS:
+        _EVS[key] = make_lm_accuracy_evaluator(
+            cfg, params, batch, labels, spec, SCALE,
+            eval_strategy="staged" if staged else "full", **kw)
+    return _EVS[key]
+
+
+def _population(arch, n=6, seed=1):
+    _, sm, *_ = _setup(arch)
+    rng = np.random.default_rng(seed)
+    P = rng.integers(0, len(SCALE), size=(n, sm.n_units))
+    P[1] = P[0]                      # a duplicate row
+    if sm.n_units > 1:
+        P[2, :-1] = P[0, :-1]        # a shared-prefix row
+    return P
+
+
+def _ref_dacc(arch, P, spec=SPEC):
+    """Full-forward reference ΔAcc, cached per (arch, spec)."""
+    key = (arch, spec.weight_fault_rate)
+    if key not in _REFS:
+        _REFS[key] = _evaluator(arch, staged=False,
+                                spec=spec).delta_acc(P)
+    return _REFS[key]
+
+
+# --------------------------------------------------------------------------
+# step API: composition == apply, apply ~= scanned forward
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_step_composition_matches_apply(arch):
+    cfg, sm, units, params, batch, _ = _setup(arch)
+    n = sm.n_units
+    row = np.random.default_rng(0).integers(0, 2, size=n)
+    wr = jnp.asarray(SPEC.weight_fault_rate * SCALE[row], jnp.float32)
+    ar = jnp.asarray(SPEC.act_fault_rate * SCALE[row], jnp.float32)
+
+    ref = sm.apply(units, batch, wr, ar, 3)
+    x = batch
+    for i in range(n):
+        x = sm.step(i, units[i], x, *_unit_rates(wr, ar, 3, i))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(x))
+
+    # clean path: both rate vectors None => no fault machinery at all
+    ref = sm.apply(units, batch)
+    x = batch
+    for i in range(n):
+        x = sm.step(i, units[i], x, *_unit_rates(None, None, 0, i))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(x))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_apply_matches_scanned_forward(arch):
+    """The step composition and the scan-based forward are the same
+    math compiled differently: equal to float reassociation (the fault
+    path quantizes, so a 1-ulp scale difference can move a value by a
+    whole quantization step — hence the tolerance, and hence why the
+    bitwise guarantees live at the evaluator level where both paths
+    share one compilation per unit)."""
+    cfg, sm, units, params, batch, _ = _setup(arch)
+    ref = np.asarray(forward(params, cfg, batch), np.float64)
+    got = np.asarray(sm.apply(units, batch), np.float64)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+    n = sm.n_units
+    row = np.random.default_rng(0).integers(0, 2, size=n)
+    wr = jnp.asarray(SPEC.weight_fault_rate * SCALE[row], jnp.float32)
+    ar = jnp.asarray(SPEC.act_fault_rate * SCALE[row], jnp.float32)
+    ref = np.asarray(forward(params, cfg, batch, fault=(wr, ar, 3)),
+                     np.float64)
+    got = np.asarray(sm.apply(units, batch, wr, ar, 3), np.float64)
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() <= 0.05 * scale
+    # and the token-level predictions agree almost everywhere
+    agree = (ref.argmax(-1) == got.argmax(-1)).mean()
+    assert agree >= 0.9, agree
+
+
+# --------------------------------------------------------------------------
+# bit-exactness: staged == full across the block-pattern zoo
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_staged_matches_full_bitwise(arch):
+    P = _population(arch)
+    ref = _ref_dacc(arch, P)
+    ev = _evaluator(arch, staged=True)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+    st = ev.staged_stats()
+    assert 0 < st["unit_runs"] <= st["full_unit_runs"]
+    assert ref.max() > 0, "fault regime must actually move accuracy"
+
+
+def test_staged_matches_full_bitwise_zero_rates():
+    """Clean direction of the harness: zero fault rates still quantize
+    (rate-0 corruption), and staged must track full bitwise there too."""
+    arch = "starcoder2-3b"
+    P = _population(arch)
+    ref = _evaluator(arch, staged=False, spec=SPEC_CLEAN).delta_acc(P)
+    ev = _evaluator(arch, staged=True, spec=SPEC_CLEAN)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+
+
+def test_encdec_embeds_batch_staged_matches_full():
+    """The stub-frontend batch shape ({"embeds"} + {"enc_embeds"}) goes
+    through the same step path as tokens — the enc-dec units thread
+    whichever decoder input exists."""
+    cfg = get_config("seamless-m4t-medium").reduced()
+    params, tok_batch, _ = lm_calibration_setup(cfg, B=B, S=S)
+    rng = np.random.default_rng(11)
+    batch = {"embeds": jnp.asarray(rng.standard_normal((B, S, cfg.d_model)),
+                                   jnp.float32),
+             "enc_embeds": tok_batch["enc_embeds"]}
+    labels = jnp.argmax(forward(params, cfg, batch), -1)
+    n = LMStepModel(cfg).n_units
+    P = np.random.default_rng(1).integers(0, 2, size=(4, n))
+    ref = make_lm_accuracy_evaluator(cfg, params, batch, labels, SPEC,
+                                     SCALE, eval_strategy="full"
+                                     ).delta_acc(P)
+    got = make_lm_accuracy_evaluator(cfg, params, batch, labels, SPEC,
+                                     SCALE, eval_strategy="staged"
+                                     ).delta_acc(P)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_staged_matches_full_chunked():
+    arch = "recurrentgemma-2b"
+    P = _population(arch)
+    ref = _ref_dacc(arch, P)
+    ev = _evaluator(arch, staged=True, eval_batch_size=2)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+
+
+def test_staged_matches_per_individual_loop():
+    arch = "mamba2-2.7b"
+    P = _population(arch)
+    ev = _evaluator(arch, staged=True)
+    np.testing.assert_array_equal(ev.delta_acc(P), loop_delta_acc(ev, P))
+
+
+# --------------------------------------------------------------------------
+# prefix-reuse economy on LM units
+# --------------------------------------------------------------------------
+def test_unit_runs_scale_with_unique_prefixes():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              n_layers=6)
+    params, batch, labels = lm_calibration_setup(cfg, B=B, S=S)
+    ev = make_lm_accuracy_evaluator(cfg, params, batch, labels, SPEC,
+                                    SCALE, eval_strategy="staged")
+    n = LMStepModel(cfg).n_units
+
+    # two rows identical except the LAST gene: all n-1 shared prefix
+    # units run once, only the final unit runs twice
+    P = np.ones((2, n), np.int64)
+    P[1, -1] = 0
+    ev.delta_acc(P)
+    st = ev.staged_stats()
+    assert st["unit_runs"] == n + 1
+    assert st["rows_evaluated"] == 2
+
+    # a child mutated at gene n-2 reuses the stored prefix chain
+    # (cross-generation reuse): only units n-2 and n-1 run
+    P2 = np.ones((1, n), np.int64)
+    P2[0, -2] = 0
+    before = ev.staged_stats()["unit_runs"]
+    ev.delta_acc(P2)
+    st = ev.staged_stats()
+    assert st["unit_runs"] == before + 2
+    assert st["prefix_hits"] >= 1
+
+    # acceptance guard: a shared-prefix population replay avoids >= 30%
+    # of the full path's unit runs
+    P3 = np.ones((8, n), np.int64)
+    P3[:, -1] = np.arange(8) % 2
+    P3[4:, -2] = 0
+    ev.delta_acc(P3)
+    st = ev.staged_stats()
+    assert st["unit_runs_avoided"] >= 0.3 * st["full_unit_runs"], st
+
+
+# --------------------------------------------------------------------------
+# LRU eviction on pytree activations: recompute, never wrong
+# --------------------------------------------------------------------------
+def test_lru_eviction_falls_back_to_recompute():
+    # enc-dec: its pytree activations (hidden + static token/memory
+    # carries) are the store's new payload shape under ISSUE 3
+    arch = "seamless-m4t-medium"
+    P = _population(arch)
+    ref = _ref_dacc(arch, P)
+    ev = _evaluator(arch, staged=True, max_store_bytes=1)
+    np.testing.assert_array_equal(ev.delta_acc(P), ref)
+    assert ev.staged_stats()["evictions"] > 0
+    # a second population sharing only shallow prefixes forces the
+    # recompute chain (the shallow activations were evicted)
+    P2 = P.copy()
+    P2[:, 1:] = 1 - P2[:, 1:]
+    ref2 = _evaluator(arch, staged=False).delta_acc(P2)
+    np.testing.assert_array_equal(ev.delta_acc(P2), ref2)
+
+
+# --------------------------------------------------------------------------
+# clean_accuracy: layer count derived from n_units, argument deprecated
+# --------------------------------------------------------------------------
+def test_clean_accuracy_derived_from_n_units():
+    arch = "mamba2-2.7b"
+    _, sm, *_ = _setup(arch)
+    ev = _evaluator(arch, staged=True)
+    clean = ev.clean_accuracy()
+    with pytest.warns(DeprecationWarning):
+        assert ev.clean_accuracy(sm.n_units) == clean
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            ev.clean_accuracy(sm.n_units + 1)
+    # a mis-shaped population is loud, not silently mis-evaluated
+    with pytest.raises(ValueError):
+        ev.delta_acc(np.zeros((2, sm.n_units + 1), np.int64))
