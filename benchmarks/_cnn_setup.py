@@ -100,7 +100,8 @@ def eval_batch(n=512, seed=99):
 def make_evaluator(name: str, params, fault_spec: FaultSpec,
                    n_eval=512, eval_batch_size=None,
                    use_weight_tables=True,
-                   eval_strategy="staged") -> InferenceAccuracyEvaluator:
+                   eval_strategy="staged",
+                   devices="auto") -> InferenceAccuracyEvaluator:
     """Population-batched ΔAcc evaluator for one of the paper's CNNs.
 
     The default CNN path is the *staged* prefix-reuse engine (the models
@@ -117,8 +118,11 @@ def make_evaluator(name: str, params, fault_spec: FaultSpec,
     512-sample batches are compute-bound (and memory-heavy — activations
     scale with rows × images), where narrow chunks win.  ``"auto"``
     probes the compiled executable's memory footprint instead (see
-    ``core.eval_engine.auto_eval_batch_size``).  Chunking never changes
-    results, only dispatch count.
+    ``core.eval_engine.auto_eval_batch_size``).  ``devices`` shards the
+    ΔAcc dispatches over local devices
+    (``core.eval_engine.DeviceScheduler``).  Neither chunking nor
+    placement ever changes results, only dispatch count and where the
+    chunks run.
     """
     from repro.models.cnn import build_weight_fault_tables
     model = CNN_MODELS[name]
@@ -141,7 +145,8 @@ def make_evaluator(name: str, params, fault_spec: FaultSpec,
                                       eval_batch_size=eval_batch_size,
                                       weight_tables=tables,
                                       step_fn=model.step,
-                                      eval_strategy=eval_strategy)
+                                      eval_strategy=eval_strategy,
+                                      devices=devices)
 
 
 def accuracy_under_partition(name: str, params, partition: np.ndarray,

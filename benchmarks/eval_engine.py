@@ -29,7 +29,15 @@ sharing emerges — through the PR-1 full-forward path and the staged
 engine, reporting per-candidate latency, unit-runs-avoided and prefix
 hit rate to results/bench/prefix_reuse.json.  With ``--smoke`` this
 doubles as the CI regression guard: the run FAILS if the staged path
-executes more unit runs than the full path would.
+executes more unit runs than the full path would, or if the sharded
+path dispatches more chunks than ``ceil(U / per_device_batch) x
+devices``.
+
+``--devices N|auto`` shards every evaluator's ΔAcc dispatches over N
+local devices (``core.eval_engine.DeviceScheduler``; combine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for fake host
+devices) — bit-identical to one device, asserted here like every other
+path equality.
 
 ``--lm [arch]`` runs the same generational replay on a transformer
 config (reduced scale, per-unit step API via
@@ -69,7 +77,8 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
                   width: float = 0.125, img: int = 16, reps: int = 3,
-                  eval_batch_size: int | None = None, seed: int = 0) -> dict:
+                  eval_batch_size: int | None = None, seed: int = 0,
+                  devices: int | str = "auto") -> dict:
     import jax
     import jax.numpy as jnp
     from repro.core import FaultSpec, InferenceAccuracyEvaluator
@@ -96,7 +105,8 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
             apply_fn, params, x, labels, spec, scale,
             eval_batch_size=eval_batch_size, weight_tables=weight_tables,
             step_fn=model.step if staged else None,
-            eval_strategy="staged" if staged else "full")
+            eval_strategy="staged" if staged else "full",
+            devices=devices)
 
     # unique chromosomes only: no dedup/cache help for any path, so the
     # headline number isolates the engine itself
@@ -169,7 +179,8 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
         "config": {"model": model_name, "pop": pop, "n_eval": n_eval,
                    "width": width, "img": img, "reps": reps,
                    "eval_batch_size": eval_batch_size,
-                   "n_devices": len(scale)},
+                   "n_devices": len(scale),
+                   "eval_devices": ev_tab.devices},
         "per_candidate_ms": {
             "loop": t_loop / pop * 1e3,
             "batched": t_vmap / pop * 1e3,
@@ -236,10 +247,35 @@ def _replay(ev, trace, clear, stats_fn):
     return dt, vals, stats
 
 
+def _chunk_bound(trace, eval_batch_size, n_devices: int) -> int:
+    """Dispatch-count ceiling for a full-engine replay of ``trace``.
+
+    Per generation the engine owes at most ``ceil(U_g /
+    per_device_batch)`` chunks, where ``U_g`` is that generation's new
+    unique rows and the per-device batch is ``eval_batch_size`` (or an
+    even split over the device pool when unset).  The sharded-path
+    guard allows ``x n_devices`` slack on top (the ISSUE-4 contract: a
+    scheduler may split chunks across the pool but must never explode
+    the dispatch count beyond it)."""
+    n_devices = max(1, n_devices)
+    seen: set = set()
+    bound = 0
+    for P in trace:
+        fresh = {tuple(map(int, row)) for row in np.asarray(P)} - seen
+        seen |= fresh
+        U = len(fresh)
+        if not U:
+            continue
+        pdb = eval_batch_size or -(-U // n_devices)
+        bound += -(-U // pdb) * n_devices
+    return bound
+
+
 def run_generational(model_name: str = "alexnet", pop: int = 60,
                      gens: int = 20, n_eval: int = 64, width: float = 0.125,
                      img: int = 16, seed: int = 0,
-                     eval_batch_size: int | None = None) -> dict:
+                     eval_batch_size: int | None = None,
+                     devices: int | str = "auto") -> dict:
     """Staged vs full-forward over a real converging population sequence.
 
     Prefix reuse only pays off where gene prefixes actually repeat —
@@ -290,7 +326,8 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
             apply_fn, params, x, labels, spec, scale,
             eval_batch_size=eval_batch_size, weight_tables=tables,
             step_fn=model.step if staged else None,
-            eval_strategy="staged" if staged else "full")
+            eval_strategy="staged" if staged else "full",
+            devices=devices)
 
     ev_full = fresh(staged=False)
     t_full, v_full, full_stats = _replay(
@@ -304,13 +341,20 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
     for g, (a, b) in enumerate(zip(v_full, v_st)):
         assert (a == b).all(), f"staged != full at generation {g}"
     candidates = pop * (gens + 1)       # initial population + children/gen
+    eval_devices = ev_full.devices
     rec = {
         "config": {"model": model_name, "pop": pop, "generations": gens,
                    "n_eval": n_eval, "width": width, "img": img,
                    "eval_batch_size": eval_batch_size, "seed": seed,
-                   "n_devices": len(scale)},
+                   "n_devices": len(scale),
+                   "eval_devices": eval_devices},
         "candidates": candidates,
         "unique_rows": full_rows,
+        "full_dispatches": full_stats["dispatches"],
+        # the bound uses the evaluator's RESOLVED chunk size ("auto"
+        # becomes an int or None inside the evaluator)
+        "chunk_bound": _chunk_bound(trace, ev_full.eval_batch_size,
+                                    eval_devices),
         "per_candidate_ms": {
             "full": t_full / candidates * 1e3,
             "staged": t_st / candidates * 1e3,
@@ -330,7 +374,8 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
 def run_lm_generational(arch: str = "olmo-1b", pop: int = 24,
                         gens: int = 8, B: int = 2, S: int = 16,
                         seed: int = 0,
-                        eval_batch_size: int | None = None) -> dict:
+                        eval_batch_size: int | None = None,
+                        devices: int | str = "auto") -> dict:
     """Staged vs full-forward replay for a transformer arch (ISSUE 3).
 
     The LM twin of :func:`run_generational`: the same converging
@@ -366,7 +411,8 @@ def run_lm_generational(arch: str = "olmo-1b", pop: int = 24,
         return make_lm_accuracy_evaluator(
             cfg, params, batch, labels, spec, scale,
             eval_batch_size=eval_batch_size,
-            eval_strategy="staged" if staged else "full")
+            eval_strategy="staged" if staged else "full",
+            devices=devices)
 
     ev_full = fresh(staged=False)
     t_full, v_full, full_stats = _replay(
@@ -386,9 +432,13 @@ def run_lm_generational(arch: str = "olmo-1b", pop: int = 24,
         "config": {"arch": arch, "reduced": True, "n_units": L,
                    "pop": pop, "generations": gens, "B": B, "S": S,
                    "eval_batch_size": eval_batch_size, "seed": seed,
-                   "n_devices": len(scale), "fault_bits": 8},
+                   "n_devices": len(scale), "fault_bits": 8,
+                   "eval_devices": ev_full.devices},
         "candidates": candidates,
         "unique_rows": full_rows,
+        "full_dispatches": full_stats["dispatches"],
+        "chunk_bound": _chunk_bound(trace, ev_full.eval_batch_size,
+                                    ev_full.devices),
         "per_candidate_ms": {
             "full": t_full / candidates * 1e3,
             "staged": t_st / candidates * 1e3,
@@ -420,6 +470,12 @@ def main():
     ap.add_argument("--eval-batch-size", default=None,
                     help="cap chromosomes per dispatch (int, or 'auto' to "
                          "probe the compiled memory footprint)")
+    ap.add_argument("--devices", default=None,
+                    help="shard ΔAcc dispatches over this many local "
+                         "devices ('auto' = all; bit-identical to one "
+                         "device — with --smoke the run also fails if "
+                         "the sharded path dispatches more chunks than "
+                         "ceil(U/per_device_batch) x devices)")
     ap.add_argument("--generations", type=int, default=20,
                     help="NSGA-II generations for the prefix-reuse replay")
     ap.add_argument("--gen-n-eval", type=int, default=64,
@@ -442,12 +498,15 @@ def main():
                          "fails if the staged path runs more unit runs "
                          "than the full path")
     args = ap.parse_args()
-    from repro.core.eval_engine import parse_eval_batch_size
+    from repro.core.eval_engine import parse_devices, parse_eval_batch_size
     ebs = parse_eval_batch_size(args.eval_batch_size)
+    dev = parse_devices(args.devices)
+    dev = "auto" if dev is None else dev
 
     if args.lm:
         rec = run_lm_generational(arch=args.lm, pop=args.lm_pop,
-                                  gens=args.lm_gens, eval_batch_size=ebs)
+                                  gens=args.lm_gens, eval_batch_size=ebs,
+                                  devices=dev)
         ur = rec["unit_runs"]
         print("# benchmark,us_per_call,derived")
         print(f"eval_engine.lm_generational_full,"
@@ -471,11 +530,17 @@ def main():
                   f"{ur['full']} unit runs (< 30% guard) — prefix "
                   f"reuse regressed on the transformer step API")
             sys.exit(1)
+        if args.smoke and rec["full_dispatches"] > rec["chunk_bound"]:
+            print(f"FAIL: LM sharded path dispatched "
+                  f"{rec['full_dispatches']} chunks, over the "
+                  f"ceil(U/per_device_batch) x devices bound of "
+                  f"{rec['chunk_bound']}")
+            sys.exit(1)
         return rec
 
     kw = dict(model_name=args.model, pop=args.pop, n_eval=args.n_eval,
               width=args.width, img=args.img, reps=args.reps,
-              eval_batch_size=ebs)
+              eval_batch_size=ebs, devices=dev)
     if args.paper:
         # only fill in values the user left at their defaults
         paper = {"n_eval": 512, "width": 0.5, "img": 32}
@@ -513,7 +578,7 @@ def main():
     gen = run_generational(model_name=args.model, pop=args.pop,
                            gens=args.generations, n_eval=args.gen_n_eval,
                            width=args.width, img=args.img,
-                           eval_batch_size=ebs)
+                           eval_batch_size=ebs, devices=dev)
     ur = gen["unit_runs"]
     print(f"eval_engine.generational_full,"
           f"{gen['per_candidate_ms']['full']*1e3:.0f},"
@@ -531,6 +596,11 @@ def main():
     if args.smoke and ur["staged"] > ur["full"]:
         print(f"FAIL: staged path ran {ur['staged']} unit runs, more than "
               f"the full path's {ur['full']} — prefix reuse regressed")
+        sys.exit(1)
+    if args.smoke and gen["full_dispatches"] > gen["chunk_bound"]:
+        print(f"FAIL: sharded path dispatched {gen['full_dispatches']} "
+              f"chunks, over the ceil(U/per_device_batch) x devices "
+              f"bound of {gen['chunk_bound']}")
         sys.exit(1)
     return rec
 

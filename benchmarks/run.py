@@ -22,7 +22,9 @@ for EXPERIMENTS.md.
 
 Flags: ``--paper`` (paper-scale pop/gens), ``--eval-batch-size N|auto``
 (chromosomes per ΔAcc dispatch), ``--eval-strategy staged|full`` (ΔAcc
-execution path; staged prefix-reuse is the CNN and small-LM default).
+execution path; staged prefix-reuse is the CNN and small-LM default),
+``--devices N|auto`` (shard ΔAcc dispatches over local devices —
+bit-identical to one device, see core/eval_engine.DeviceScheduler).
 """
 from __future__ import annotations
 
@@ -71,6 +73,16 @@ EVAL_BATCH = _ebs_flag()
 EVAL_STRATEGY = _flag("--eval-strategy", "staged")
 
 
+def _devices_flag(default="auto"):
+    from repro.core.eval_engine import parse_devices
+    return parse_devices(_flag("--devices", default))
+
+
+# local devices the ΔAcc dispatches shard over ("auto" = all of them;
+# single-device hosts degrade to the historical path, bit-identically)
+EVAL_DEVICES = _devices_flag()
+
+
 def _partitioners(name, params, fault_spec):
     from benchmarks._cnn_setup import make_evaluator
     from repro.core import (AFarePart, CNNPartedLike, FaultUnawareBaseline,
@@ -80,7 +92,7 @@ def _partitioners(name, params, fault_spec):
     layers = CNN_MODELS[name].layer_infos(num_classes=16, width=0.5, img=32)
     cfg = NSGA2Config(population=POP, generations=GEN, seed=0)
     ev = make_evaluator(name, params, fault_spec, eval_batch_size=EVAL_BATCH,
-                        eval_strategy=EVAL_STRATEGY)
+                        eval_strategy=EVAL_STRATEGY, devices=EVAL_DEVICES)
     # "auto" was already resolved (probe-compiled) inside make_evaluator;
     # hand the resolved value on so ObjectiveFn doesn't probe again
     ebs = ev.eval_batch_size if EVAL_BATCH == "auto" else EVAL_BATCH
@@ -282,7 +294,8 @@ def bench_surrogate(name: str = "resnet18"):
 
     true_ev = make_evaluator(name, params, spec, n_eval=256,
                              eval_batch_size=EVAL_BATCH,
-                             eval_strategy=EVAL_STRATEGY)
+                             eval_strategy=EVAL_STRATEGY,
+                             devices=EVAL_DEVICES)
     cm = CostModel(layers, PAPER_DEVICES)
     sur = SurrogateAccuracyEvaluator(cm)
     t0 = time.time()
@@ -366,7 +379,8 @@ def bench_lm(arch: str = "olmo-1b"):
         params, batch, labels = lm_calibration_setup(cfg, S=S)
         ev = make_lm_accuracy_evaluator(
             cfg, params, batch, labels, spec, scale,
-            eval_batch_size=EVAL_BATCH, eval_strategy=EVAL_STRATEGY)
+            eval_batch_size=EVAL_BATCH, eval_strategy=EVAL_STRATEGY,
+            devices=EVAL_DEVICES)
         t0 = time.time()
         plan = lm_partitioner(cfg, ev, seq=S, nsga2_config=nsga).optimize()
         staged_s = time.time() - t0

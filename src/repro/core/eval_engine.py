@@ -1,33 +1,52 @@
-"""Population-level batched evaluation engine (dedup -> chunk -> dispatch).
+"""Population-level evaluation engine: three layers, one contract.
 
-The NSGA-II inner loop evaluates a whole population every generation.
-The paper's ΔAcc objective runs fault-injected inference per candidate,
-which is exactly where a per-individual Python loop is slowest: each
-candidate pays a separate jitted dispatch (and, on small problems, the
-per-op overhead of a batch-1 executable).  This module centralises the
-population-side bookkeeping so evaluators only provide one batched
-callable:
+The NSGA-II inner loop evaluates fault-injected ΔAcc for a whole
+population every generation (paper Alg. 1 lines 5-7).  This module owns
+every population-side concern of that loop, stacked in three layers:
 
-    batch_fn(rows: np.ndarray [U, L]) -> np.ndarray [U]
+1. **Population engine** (:class:`PopulationEvalEngine`, PR 1) — the
+   whole-forward path.  Deduplicates rows inside a population, caches
+   rows across generations (chromosomes are hashable integer tuples and
+   evaluation is deterministic given the seed, so caching is exact),
+   and pushes the unique uncached rows through chunked, shape-bucketed
+   ``jit(vmap)`` dispatches: ``eval_batch_size`` caps rows per dispatch,
+   chunks are padded (by repeating the last row) to a small set of
+   static shapes so XLA compiles O(log N) variants.
 
-``batch_fn`` must evaluate all U rows in a SINGLE device dispatch
-(typically ``jit(vmap(...))``).  The engine guarantees:
+2. **Prefix engine** (:class:`PrefixEvalEngine`, PRs 2-3) — the staged
+   path.  A chromosome's corrupted activation after unit *i* depends
+   only on genes ``P[0..i]``, so the engine walks the model depth by
+   depth, evaluating each unique gene *prefix* once, with an
+   LRU-bounded :class:`ActivationStore` (eviction falls back to
+   recompute, never to wrong results).  Per-generation cost scales
+   with unique prefixes, not ``unique_rows × L``.
 
-  * **dedup** — duplicate rows inside a population are evaluated once;
-  * **cache** — rows seen in earlier generations are never re-dispatched
-    (chromosomes are hashable integer tuples, evaluation is
-    deterministic given the seed, so caching is exact);
-  * **chunking** — ``eval_batch_size`` caps the rows per dispatch so
-    device memory stays bounded while dispatch count stays
-    O(ceil(U / eval_batch_size)), not O(N);
-  * **shape bucketing** — chunks are padded (by repeating the last row)
-    to a small set of static shapes so XLA compiles O(log N) variants
-    instead of one per unique population size.
+3. **Device scheduler** (:class:`DeviceScheduler`, PR 4) — the sharded
+   path.  Both engines accept a scheduler that places their dispatch
+   chunks across ``jax.local_devices()`` (mesh enumeration via
+   ``launch/mesh.make_eval_mesh``) and gathers results once per
+   generation instead of syncing per chunk.  The full engine
+   round-robins chunks; the prefix engine shards by *prefix group* —
+   every prefix under one depth-0 gene lands on one device, so parent
+   activations, their children, and any shared carries
+   (:class:`PrefixRef`) stay device-local and no dispatch ever mixes
+   devices.  With one device (or no scheduler) both engines degrade to
+   the exact single-device behaviour.
 
 Per-row results must be independent of the other rows in the batch
-(true for vmapped per-candidate metrics), so padding and chunk
-boundaries never change values — tests/test_eval_engine.py asserts
-bit-for-bit equality against the per-individual loop.
+(true for vmapped per-candidate metrics), so padding, chunk boundaries,
+and device placement never change values — tests/test_eval_engine.py,
+tests/test_staged_eval.py and tests/test_sharded_eval.py assert
+bit-for-bit equality against the per-individual loop, across engines,
+and across device counts.  The ``batch_fn`` contract of the population
+engine is
+
+    batch_fn(rows: np.ndarray [U, L]) -> [U] per-row metrics
+
+evaluated in a SINGLE device dispatch (typically ``jit(vmap(...))``);
+when a multi-device scheduler is attached the engine also passes
+``device=`` and the callable must commit its inputs there
+(``jax.device_put``) and return the un-synced device array.
 """
 from __future__ import annotations
 
@@ -38,9 +57,10 @@ from typing import Callable, Sequence
 import numpy as np
 
 __all__ = ["PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
+           "DeviceScheduler", "PrefixRef",
            "chunked_rows", "bucket_size", "pad_rows",
            "auto_eval_batch_size", "device_memory_budget",
-           "peak_memory_bytes", "parse_eval_batch_size"]
+           "peak_memory_bytes", "parse_eval_batch_size", "parse_devices"]
 
 
 def parse_eval_batch_size(value) -> int | str | None:
@@ -53,6 +73,80 @@ def parse_eval_batch_size(value) -> int | str | None:
     if n < 1:
         raise ValueError(f"eval_batch_size must be >= 1, got {n}")
     return n
+
+
+def parse_devices(value) -> int | str | None:
+    """The one CLI/config grammar for the ``devices`` knob: ``None``
+    (leave the evaluator's setting alone) and ``"auto"`` (use every
+    local device) pass through, anything else must be a positive device
+    count.  Shared by every benchmark CLI, like
+    :func:`parse_eval_batch_size`."""
+    if value is None or value == "auto":
+        return value
+    n = int(value)
+    if n < 1:
+        raise ValueError(f"devices must be >= 1, got {n}")
+    return n
+
+
+class DeviceScheduler:
+    """Placement of evaluation dispatches across local devices.
+
+    Owns the device pool both engines shard over: ``devices="auto"``
+    takes every ``jax.local_devices()`` entry, an int takes the first
+    ``n`` of them (raising when the host has fewer).  The pool is
+    enumerated through a mesh built by ``launch/mesh.make_eval_mesh``
+    so the evaluation engines and the launch stack agree on device
+    order, and ``self.mesh`` is available to callers that want
+    collective-based evaluation on top of it.
+
+    Placement is *committed-input* scheduling: callers
+    ``jax.device_put`` a chunk's inputs onto ``device_for(i)`` (or a
+    device the caller picked) and jit runs the chunk there — no
+    collectives, no resharding, and chunks on different devices execute
+    concurrently because jax dispatch is asynchronous.  Per-row results
+    are device-independent, so placement never changes values (the
+    differential test in tests/test_sharded_eval.py pins
+    ``devices=1 == devices=N`` bitwise).
+    """
+
+    def __init__(self, devices: int | str | None = "auto"):
+        import jax
+
+        local = jax.local_devices()
+        spec = parse_devices(devices)
+        n = len(local) if spec in (None, "auto") else spec
+        if n > len(local):
+            raise ValueError(
+                f"devices={n} requested but only {len(local)} local "
+                f"devices exist (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n} for fake "
+                f"host devices)")
+        from repro.launch.mesh import make_eval_mesh
+        self.mesh = make_eval_mesh(n)
+        self.devices = list(self.mesh.devices.flat)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def device_for(self, i: int):
+        """Round-robin device for the ``i``-th chunk of a batch."""
+        return self.devices[i % len(self.devices)]
+
+    @staticmethod
+    def put(array, device):
+        """THE placement idiom: commit a host array to ``device``, or
+        convert in place when ``device`` is None (the single-device
+        degradation path).  Both engines and every ``batch_fn``
+        implementation route through this so the convention lives in
+        one place."""
+        import jax
+        import jax.numpy as jnp
+
+        if device is None:
+            return jnp.asarray(array)
+        return jax.device_put(array, device)
 
 
 def bucket_size(n: int) -> int:
@@ -95,14 +189,41 @@ def pad_rows(rows: np.ndarray, padded: int) -> np.ndarray:
     return np.concatenate([rows, pad], axis=0)
 
 
+class PrefixRef:
+    """Marker leaf inside a stored activation: "this carry field equals
+    the activation stored at ``prefix``".
+
+    The staged enc-dec walk used to store the encoder memory inside
+    EVERY decoder prefix's activation — one ``[B, Se, D]`` buffer per
+    (prefix × unit) even though the memory depends only on the encoder
+    genes.  The engine now *interns* such fields
+    (``shared_fields``): before storing, the field's value is replaced
+    by a :class:`PrefixRef` to the keying prefix, and resolution fetches
+    (or, after LRU eviction, recomputes) the real activation through the
+    normal ``_ensure_act`` machinery.  A ref owns no buffer, so the
+    store budget counts the shared payload once — per encoder prefix,
+    not per (prefix × unit) — which tests/test_sharded_eval.py pins.
+    """
+
+    __slots__ = ("prefix",)
+
+    def __init__(self, prefix: tuple):
+        self.prefix = prefix
+
+    def __repr__(self):
+        return f"PrefixRef({self.prefix!r})"
+
+
 def _nbytes(act) -> int:
     """Buffer bytes of an activation (array or pytree — the LM units
-    thread dicts of hidden state + static token/memory carries) without
-    forcing a transfer."""
+    thread dicts of hidden state + shared-carry refs) without forcing a
+    transfer."""
     import jax
 
     total = 0
     for a in jax.tree.leaves(act):
+        if not hasattr(a, "dtype"):
+            continue                 # PrefixRef markers own no buffer
         total += int(np.prod(a.shape)) * a.dtype.itemsize if a.ndim \
             else a.dtype.itemsize
     return total
@@ -206,18 +327,43 @@ class PrefixEvalEngine:
     performed (including recompute fallbacks after eviction);
     ``rows_evaluated * n_units`` is what the full-forward path would
     have run, so ``unit_runs_avoided`` is the engine's win.
+
+    Sharding (``scheduler``): with a multi-device
+    :class:`DeviceScheduler` the engine shards by *prefix group* —
+    every prefix under one depth-0 gene is assigned to one device
+    (depth-0 genes round-robin over the pool), so siblings land
+    together, a chunk's parent activations are already resident on its
+    device (jax raises on cross-device mixing, so this grouping is
+    load-bearing, not a preference), and the :class:`ActivationStore`
+    stays device-local.  Final-depth results are gathered once per
+    ``evaluate`` call after every chunk has been dispatched, so devices
+    run concurrently.  One device (or no scheduler) is the exact
+    single-device path.
+
+    Shared carries (``shared_fields``): maps a top-level carry-dict
+    field name to the depth whose prefix fully determines it (the
+    field's value must EQUAL the activation stored at that prefix —
+    true for the enc-dec encoder memory, which IS the last encoder
+    unit's output).  Stored activations deeper than that depth carry a
+    :class:`PrefixRef` instead of the payload.
     """
 
     def __init__(self, unit_fns: Sequence[Callable], n_units: int,
                  eval_batch_size: int | None = None,
-                 max_store_bytes: int | None = None):
+                 max_store_bytes: int | None = None,
+                 scheduler: DeviceScheduler | None = None,
+                 shared_fields: dict[str, int] | None = None):
         assert len(unit_fns) == n_units, (len(unit_fns), n_units)
         self.unit_fns = unit_fns
         self.n_units = n_units
         self.eval_batch_size = eval_batch_size
         self.store = ActivationStore(max_store_bytes)
+        self.scheduler = scheduler
+        self.shared_fields = dict(shared_fields or {})
+        self._root_device: dict[int, int] = {}  # depth-0 gene -> device idx
         self._cache: dict[tuple, float] = {}   # full row -> final metric
         self.dispatches = 0        # unit_fn invocations (jit dispatches)
+        self.device_dispatches: dict[int, int] = {}  # device idx -> count
         self.rows_evaluated = 0    # unique uncached rows walked
         self.unit_runs = 0         # unit executions actually performed
         self.prefix_hits = 0       # needed prefixes found in the store
@@ -249,6 +395,7 @@ class PrefixEvalEngine:
             "recomputes": self.recomputes,
             "evictions": self.store.evictions,
             "dispatches": self.dispatches,
+            "device_dispatches": dict(self.device_dispatches),
             "store_entries": len(self.store),
             "store_bytes": self.store.nbytes,
         }
@@ -256,6 +403,15 @@ class PrefixEvalEngine:
     def clear(self):
         """Drop cached accuracies and activations (fault env changed)."""
         self._cache.clear()
+        self.store.clear()
+
+    def reset_placement(self):
+        """Forget prefix-group device assignments, per-device dispatch
+        accounting, AND the stored activations (they are committed to
+        the old device pool; mixing them with a new pool would raise
+        at stack time)."""
+        self._root_device.clear()
+        self.device_dispatches.clear()
         self.store.clear()
 
     # -- evaluation ----------------------------------------------------------
@@ -276,10 +432,32 @@ class PrefixEvalEngine:
             self._run_rows(np.array(list(fresh), dtype=P.dtype))
         return np.array([self._cache[k] for k in keys])
 
+    def _multi(self) -> DeviceScheduler | None:
+        """The scheduler iff it actually shards (> 1 device)."""
+        s = self.scheduler
+        return s if s is not None and s.n_devices > 1 else None
+
+    def _device_index(self, prefix: tuple) -> int:
+        """Device slot for a prefix: its depth-0 gene's slot (depth-0
+        genes round-robin over the pool in first-seen order, which is
+        deterministic because prefixes are walked in population order).
+        Children inherit transitively, so a whole prefix subtree — and
+        every activation a dispatch stacks — lives on one device."""
+        root = int(prefix[0])
+        if root not in self._root_device:
+            self._root_device[root] = \
+                len(self._root_device) % self.scheduler.n_devices
+        return self._root_device[root]
+
     def _run_rows(self, R: np.ndarray):
-        """Walk unique uncached rows depth by depth."""
+        """Walk unique uncached rows depth by depth.  Final-depth chunk
+        results are gathered AFTER the whole walk has been dispatched
+        (jax dispatch is async, so with a multi-device scheduler the
+        per-device chunk streams execute concurrently)."""
         L = self.n_units
+        sched = self._multi()
         self.rows_evaluated += len(R)
+        pending: list[tuple[list, list]] = []   # (prefixes, result chunks)
         for i in range(L):
             last = i == L - 1
             todo: dict[tuple, None] = {}
@@ -297,60 +475,111 @@ class PrefixEvalEngine:
             if not todo:
                 continue
             prefixes = list(todo)
-            parents = None if i == 0 else \
-                [self._ensure_act(p[:-1]) for p in prefixes]
-            devs = np.array([p[-1] for p in prefixes], np.int64)
-            outs = self._dispatch_depth(i, parents, devs, final=last)
-            if last:
-                for p, v in zip(prefixes, outs):
-                    self._cache[p] = float(v)
+            if sched is None:
+                groups = [(None, prefixes)]
             else:
-                pin = set(prefixes)
-                for p, a in zip(prefixes, outs):
-                    self.store.put(p, a, pinned=pin)
-            self.unit_runs += len(prefixes)
+                by_dev: dict[int, list] = {}
+                for p in prefixes:
+                    by_dev.setdefault(self._device_index(p), []).append(p)
+                groups = [(d, by_dev[d]) for d in sorted(by_dev)]
+            pin = set(prefixes)
+            for dev_idx, group in groups:
+                parents = None if i == 0 else \
+                    [self._ensure_act(p[:-1]) for p in group]
+                devs = np.array([p[-1] for p in group], np.int64)
+                outs = self._dispatch_depth(i, parents, devs, final=last,
+                                            dev_idx=dev_idx)
+                if last:
+                    pending.append((group, outs))
+                else:
+                    for p, a in zip(group, outs):
+                        self.store.put(p, self._intern(p, a), pinned=pin)
+                self.unit_runs += len(group)
+        for group, chunks in pending:       # the once-per-call gather:
+            i = 0                           # one host transfer per chunk
+            for out, n in chunks:
+                for p, v in zip(group[i:i + n], np.asarray(out)[:n]):
+                    self._cache[p] = float(v)
+                i += n
+
+    def _intern(self, prefix: tuple, act):
+        """Replace shared carry fields (deeper than their keying depth)
+        with :class:`PrefixRef` markers before storing."""
+        if not self.shared_fields or not isinstance(act, dict):
+            return act
+        out = act
+        for field, depth in self.shared_fields.items():
+            if (len(prefix) > depth + 1 and field in out
+                    and not isinstance(out[field], PrefixRef)):
+                if out is act:
+                    out = dict(act)
+                out[field] = PrefixRef(prefix[:depth + 1])
+        return out
+
+    def _resolve(self, act):
+        """Materialise :class:`PrefixRef` fields of a stored activation
+        (recomputing the referenced prefix if it was LRU-evicted)."""
+        if not self.shared_fields or not isinstance(act, dict) \
+                or not any(isinstance(v, PrefixRef) for v in act.values()):
+            return act
+        return {k: self._ensure_act(v.prefix) if isinstance(v, PrefixRef)
+                else v for k, v in act.items()}
 
     def _ensure_act(self, prefix: tuple):
-        """Activation for ``prefix``, recomputing the chain from the
-        nearest resident ancestor if LRU eviction dropped it (slower,
-        never wrong)."""
+        """Resolved activation for ``prefix``, recomputing the chain
+        from the nearest resident ancestor if LRU eviction dropped it
+        (slower, never wrong)."""
         act = self.store.get(prefix)
         if act is not None:
-            return act
+            return self._resolve(act)
         i = len(prefix) - 1
         parents = None if i == 0 else [self._ensure_act(prefix[:-1])]
         devs = np.array([prefix[-1]], np.int64)
-        out = self._dispatch_depth(i, parents, devs, final=False)
+        dev_idx = None if self._multi() is None else \
+            self._device_index(prefix)
+        out = self._dispatch_depth(i, parents, devs, final=False,
+                                   dev_idx=dev_idx)
         self.unit_runs += 1
         self.recomputes += 1
-        self.store.put(prefix, out[0], pinned={prefix})
+        self.store.put(prefix, self._intern(prefix, out[0]),
+                       pinned={prefix})
         return out[0]
 
     def _dispatch_depth(self, i: int, parents: list | None,
-                        devs: np.ndarray, final: bool) -> list:
+                        devs: np.ndarray, final: bool,
+                        dev_idx: int | None = None) -> list:
         """Chunked shape-bucketed dispatches of unit ``i``; returns the
-        per-prefix outputs (activation arrays/pytrees, or scalars at the
-        final depth).  Activations are stacked and unstacked leaf-wise,
-        so units may carry arbitrary pytrees (the LM enc-dec units
-        thread token batches and encoder memory as dict entries)."""
+        per-prefix activation outputs (arrays/pytrees, unstacked
+        leaf-wise — units may carry arbitrary pytrees), or — at the
+        final depth — the un-synced ``(chunk_result, n_rows)`` pairs
+        the caller converts (one host transfer per chunk) after every
+        dispatch has been issued.  ``dev_idx`` commits the chunk inputs
+        to that scheduler device; parents are resident there already
+        (prefix-group invariant)."""
         import jax
         import jax.numpy as jnp
 
+        device = None if dev_idx is None else self.scheduler.devices[dev_idx]
         outs: list = []
         for start, stop, padded in chunked_rows(len(devs),
                                                 self.eval_batch_size):
-            dev_c = pad_rows(devs[start:stop], padded)
+            dev_c = DeviceScheduler.put(
+                np.asarray(pad_rows(devs[start:stop], padded), np.int32),
+                device)
             if parents is None:
                 acts = None
             else:
                 chunk = parents[start:stop]
                 chunk = chunk + [chunk[-1]] * (padded - len(chunk))
                 acts = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk)
-            out = self.unit_fns[i](acts, jnp.asarray(dev_c, jnp.int32))
+            out = self.unit_fns[i](acts, dev_c)
             self.dispatches += 1
+            if dev_idx is not None:
+                self.device_dispatches[dev_idx] = \
+                    self.device_dispatches.get(dev_idx, 0) + 1
             n = stop - start
             if final:
-                outs.extend(np.asarray(out[:n]))
+                outs.append((out, n))
             else:
                 outs.extend(jax.tree.map(lambda a, j=j: a[j], out)
                             for j in range(n))
@@ -358,12 +587,27 @@ class PrefixEvalEngine:
 
 
 class PopulationEvalEngine:
-    """Dedup + cache + chunked single-dispatch evaluation of int rows."""
+    """Dedup + cache + chunked single-dispatch evaluation of int rows.
+
+    With a multi-device :class:`DeviceScheduler`, chunks round-robin
+    over the pool (``batch_fn`` is then called with ``device=`` and
+    must commit its inputs there) and results are converted to host
+    values only after EVERY chunk has been dispatched — jax dispatch is
+    async, so the devices execute their chunk streams concurrently and
+    the host pays one gather per generation instead of one sync per
+    chunk.  When ``eval_batch_size`` is unset the unique batch is split
+    into ``n_devices`` even chunks so a whole-population dispatch still
+    parallelises; one device (or no scheduler) degrades to the exact
+    single-device path.  Placement never changes values (per-row
+    independence), which tests/test_sharded_eval.py pins bitwise.
+    """
 
     def __init__(self, batch_fn: Callable[[np.ndarray], np.ndarray],
-                 eval_batch_size: int | None = None):
+                 eval_batch_size: int | None = None,
+                 scheduler: DeviceScheduler | None = None):
         self.batch_fn = batch_fn
         self.eval_batch_size = eval_batch_size
+        self.scheduler = scheduler
         self._cache: dict[tuple, float] = {}
         self.dispatches = 0          # batch_fn invocations (== jit dispatches)
         self.rows_evaluated = 0      # unique rows actually computed
@@ -383,13 +627,29 @@ class PopulationEvalEngine:
         if fresh:
             rows = P[list(fresh.values())]
             fresh_keys = list(fresh)
-            for start, stop, padded in chunked_rows(len(rows),
-                                                    self.eval_batch_size):
+            sched = self.scheduler
+            if sched is not None and sched.n_devices <= 1:
+                sched = None
+            ebs = self.eval_batch_size
+            if ebs is None and sched is not None:
+                # per-device chunks: a whole-population dispatch would
+                # serialise on one device, so split the unique batch
+                # evenly over the pool
+                ebs = -(-len(rows) // sched.n_devices)
+            pending = []
+            for ci, (start, stop, padded) in enumerate(
+                    chunked_rows(len(rows), ebs)):
                 chunk = pad_rows(rows[start:stop], padded)
-                vals = np.asarray(self.batch_fn(chunk))
+                if sched is not None:
+                    val = self.batch_fn(chunk, device=sched.device_for(ci))
+                else:
+                    val = self.batch_fn(chunk)
                 self.dispatches += 1
                 self.rows_evaluated += stop - start
-                for k, v in zip(fresh_keys[start:stop], vals[:stop - start]):
+                pending.append((fresh_keys[start:stop], val, stop - start))
+            for chunk_keys, val, n in pending:   # once-per-call gather
+                vals = np.asarray(val)
+                for k, v in zip(chunk_keys, vals[:n]):
                     self._cache[k] = float(v)
         return np.array([self._cache[k] for k in keys])
 
@@ -414,13 +674,19 @@ def peak_memory_bytes(compiled) -> int:
                 "temp_size_in_bytes"))
 
 
-def device_memory_budget(default: int = 2 << 30) -> int:
-    """Bytes of device memory the evaluator may plan against.
+def device_memory_budget(default: int = 2 << 30, n_devices: int = 1) -> int:
+    """Bytes of device memory the evaluator may plan against, PER
+    DEVICE.
 
-    Order: ``REPRO_EVAL_MEM_BUDGET`` env var (bytes) -> the backend's
-    reported ``bytes_limit`` -> a quarter of host RAM (CPU backend) ->
-    ``default``.
+    Order: ``REPRO_EVAL_MEM_BUDGET`` env var (bytes per device — an
+    explicit operator cap is never rescaled) -> the backend's reported
+    ``bytes_limit`` (already per device) -> a quarter of host RAM (CPU
+    backend) divided by ``n_devices``, because fake host devices
+    (``--xla_force_host_platform_device_count``) share the one RAM pool
+    -> ``default / n_devices``.  With the default ``n_devices=1`` this
+    is exactly the historical global budget.
     """
+    n_devices = max(1, int(n_devices))
     env = os.environ.get("REPRO_EVAL_MEM_BUDGET")
     if env:
         return int(env)
@@ -436,17 +702,19 @@ def device_memory_budget(default: int = 2 << 30) -> int:
         pages = os.sysconf("SC_PHYS_PAGES")
         page = os.sysconf("SC_PAGE_SIZE")
         if pages > 0 and page > 0:
-            return pages * page // 4
+            return pages * page // 4 // n_devices
     except (ValueError, OSError, AttributeError):
         pass
-    return default
+    return default // n_devices
 
 
 def auto_eval_batch_size(probe: Callable[[int], int],
                          budget: int | None = None,
                          reserved: int = 0,
-                         max_rows: int = 1024) -> int | None:
-    """Pick the largest power-of-two chunk whose memory footprint fits.
+                         max_rows: int = 1024,
+                         n_devices: int = 1) -> int | None:
+    """Pick the largest power-of-two chunk whose memory footprint fits
+    ONE device.
 
     ``probe(n_rows)`` returns the peak device bytes of the evaluator's
     batched executable compiled for ``n_rows`` (see
@@ -456,18 +724,24 @@ def auto_eval_batch_size(probe: Callable[[int], int],
     footprints are linear in the vmapped row axis for the same reason
     they are linear in depth there.  ``reserved`` carves out bytes the
     caller keeps resident across dispatches (e.g. the staged engine's
-    activation store cap).  Returns None when the backend reports no
-    usable numbers OR no measurable per-row slope (meaning: the probe
-    carries no sizing information, so don't pretend to cap).  When even
-    one row exceeds the budget the floor is still 1 — a dispatch has to
-    happen — which is the best a chunk-size knob can do.
+    activation store cap).  A chunk is a single-device dispatch even
+    when a :class:`DeviceScheduler` spreads chunks over a pool, so the
+    budget this fits against is per-device: an explicit ``budget`` is
+    taken as the caller's per-device number, otherwise
+    :func:`device_memory_budget` resolves it for ``n_devices``.
+    Returns None when the backend reports no usable numbers OR no
+    measurable per-row slope (meaning: the probe carries no sizing
+    information, so don't pretend to cap).  When even one row exceeds
+    the budget the floor is still 1 — a dispatch has to happen — which
+    is the best a chunk-size knob can do.
     """
     p1, p2 = probe(1), probe(2)
     if p1 <= 0 or p2 <= 0 or p2 <= p1:
         return None
     per_row = p2 - p1
     fixed = max(p1 - per_row, 0)
-    avail = (budget if budget is not None else device_memory_budget())
+    avail = (budget if budget is not None
+             else device_memory_budget(n_devices=n_devices))
     avail -= reserved + fixed
     n = 1
     while n * 2 <= max_rows and (n * 2) * per_row <= avail:

@@ -71,9 +71,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CostModel
-from repro.core.eval_engine import (PopulationEvalEngine, PrefixEvalEngine,
-                                    auto_eval_batch_size, chunked_rows,
-                                    pad_rows, peak_memory_bytes)
+from repro.core.eval_engine import (DeviceScheduler, PopulationEvalEngine,
+                                    PrefixEvalEngine, auto_eval_batch_size,
+                                    chunked_rows, pad_rows,
+                                    peak_memory_bytes)
 from repro.core.fault import FaultSpec
 
 __all__ = [
@@ -114,6 +115,20 @@ class InferenceAccuracyEvaluator:
       max_store_bytes: LRU cap on the staged engine's activation store
         (None = unbounded).  Eviction falls back to recompute — a
         performance knob, never a correctness one.
+      devices: how many local devices the evaluation may shard over —
+        ``"auto"`` (every ``jax.local_devices()`` entry, the default)
+        or a positive count.  Chunks are placed round-robin (full path)
+        or by prefix group (staged path) via
+        ``eval_engine.DeviceScheduler``; one device is exactly the
+        historical single-device path, and sharding never changes
+        values (tests/test_sharded_eval.py pins devices=1 == devices=N
+        bitwise).
+      shared_carry_fields: staged-engine interning spec — maps a
+        top-level carry-dict field to the unit depth whose gene prefix
+        fully determines (and whose stored activation equals) it, e.g.
+        ``{"mem": n_enc_layers - 1}`` for enc-dec encoder memory.  The
+        store then keeps one payload per keying prefix instead of one
+        per (prefix × unit).
     """
 
     def __init__(self, apply_fn, params, x: jax.Array, labels: jax.Array,
@@ -124,7 +139,9 @@ class InferenceAccuracyEvaluator:
                  step_fn: Callable | None = None,
                  eval_strategy: str = "auto",
                  n_units: int | None = None,
-                 max_store_bytes: int | None = 256 << 20):
+                 max_store_bytes: int | None = 256 << 20,
+                 devices: int | str | None = "auto",
+                 shared_carry_fields: dict | None = None):
         self.spec = spec
         self.base_seed = base_seed
         self.labels = labels
@@ -137,6 +154,8 @@ class InferenceAccuracyEvaluator:
         self._built_unit_fns = None
         self._prefix_engine = None
         self.max_store_bytes = max_store_bytes
+        self._scheduler = DeviceScheduler(devices)
+        self.shared_carry_fields = dict(shared_carry_fields or {})
         if n_units is None and isinstance(params, (list, tuple)):
             # per-unit param lists carry their own unit count; anything
             # else (e.g. a raw param dict) must pass n_units explicitly
@@ -184,7 +203,8 @@ class InferenceAccuracyEvaluator:
 
             self._acc_batch_tables = _acc_batch_tables
 
-        self._engine = PopulationEvalEngine(self._dispatch, None)
+        self._engine = PopulationEvalEngine(self._dispatch, None,
+                                            scheduler=self._scheduler)
         if self._strategy == "staged":
             self._ensure_prefix_engine()
         self._cache = self._engine._cache      # chromosome -> faulty accuracy
@@ -200,7 +220,9 @@ class InferenceAccuracyEvaluator:
             self._prefix_engine = PrefixEvalEngine(
                 [functools.partial(self._unit_dispatch, i) for i in range(L)],
                 L, eval_batch_size=self._engine.eval_batch_size,
-                max_store_bytes=self.max_store_bytes)
+                max_store_bytes=self.max_store_bytes,
+                scheduler=self._scheduler,
+                shared_fields=self.shared_carry_fields)
             self._prefix_engine._cache = self._engine._cache
         return self._prefix_engine
 
@@ -257,6 +279,30 @@ class InferenceAccuracyEvaluator:
         if self._prefix_engine is None:
             return {}
         return self._prefix_engine.stats()
+
+    @property
+    def devices(self) -> int:
+        """Local devices the evaluation shards over (see the
+        constructor's ``devices``)."""
+        return self._scheduler.n_devices
+
+    @devices.setter
+    def devices(self, value: int | str | None):
+        sched = DeviceScheduler("auto" if value is None else value)
+        if sched.n_devices == self._scheduler.n_devices:
+            return                              # same pool, keep state
+        self._scheduler = sched
+        self._engine.scheduler = sched
+        if self._prefix_engine is not None:
+            self._prefix_engine.scheduler = sched
+            # stored activations are committed to the OLD pool; jax
+            # raises on cross-device stacking, so drop placement+store
+            # (row-level results are host floats and stay valid)
+            self._prefix_engine.reset_placement()
+        if getattr(self, "_ebs_auto", False):
+            # an "auto"-probed chunk size was fitted to the OLD pool's
+            # per-device budget; re-resolve against the new one
+            self.eval_batch_size = "auto"
 
     @property
     def eval_strategy(self) -> str:
@@ -319,6 +365,9 @@ class InferenceAccuracyEvaluator:
 
     @eval_batch_size.setter
     def eval_batch_size(self, value: int | str | None):
+        # remember "auto" so a later pool change (the devices setter)
+        # can re-fit the chunk size to the new per-device budget
+        self._ebs_auto = value == "auto"
         if value == "auto":
             value = self._auto_eval_batch_size()
         self._engine.eval_batch_size = value
@@ -339,6 +388,15 @@ class InferenceAccuracyEvaluator:
         engine's per-unit dispatches touch strictly less than one full
         forward per row, so the full-forward probe is a safe upper
         bound for it.
+
+        Budgeting is PER DEVICE: a chunk is a single-device dispatch
+        even when the scheduler spreads chunks over a pool, so the
+        chunk must fit one device's share
+        (``device_memory_budget(n_devices=...)``).  The staged
+        activation-store cap is still reserved in full on every device
+        — prefix-group sharding balances resident activations across
+        the pool only as well as the depth-0 genes spread, so the full
+        cap is the safe bound.
         """
         L = self._n_units
         if not L:
@@ -360,7 +418,8 @@ class InferenceAccuracyEvaluator:
 
         reserved = self.max_store_bytes or 0 \
             if self._strategy == "staged" else 0
-        return auto_eval_batch_size(probe, reserved=reserved)
+        return auto_eval_batch_size(probe, reserved=reserved,
+                                    n_devices=self._scheduler.n_devices)
 
     @property
     def dispatches(self) -> int:
@@ -370,15 +429,20 @@ class InferenceAccuracyEvaluator:
             n += self._prefix_engine.dispatches
         return n
 
-    def _dispatch(self, rows: np.ndarray) -> np.ndarray:
-        """One jitted dispatch: [U, L] device rows -> [U] faulty accuracy."""
+    def _dispatch(self, rows: np.ndarray, device=None):
+        """One jitted dispatch: [U, L] device rows -> [U] faulty
+        accuracies, returned as the UN-SYNCED device array (the engine
+        gathers once per generation).  ``device`` commits the chunk's
+        inputs — and with them the computation — to one scheduler
+        device."""
         seed = jnp.int32(self.base_seed)
+        put = DeviceScheduler.put
         if self._acc_batch_tables is not None:
-            return np.asarray(
-                self._acc_batch_tables(jnp.asarray(rows, jnp.int32), seed))
-        WR = jnp.asarray(self.w_rates_by_device[rows], jnp.float32)
-        AR = jnp.asarray(self.a_rates_by_device[rows], jnp.float32)
-        return np.asarray(self._acc_batch(WR, AR, seed))
+            return self._acc_batch_tables(
+                put(np.asarray(rows, np.int32), device), seed)
+        WR = put(np.asarray(self.w_rates_by_device[rows], np.float32), device)
+        AR = put(np.asarray(self.a_rates_by_device[rows], np.float32), device)
+        return self._acc_batch(WR, AR, seed)
 
     def _clean_for(self, n: int) -> float:
         if self._clean is None:
@@ -440,6 +504,7 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
                                eval_batch_size: int | str | None = None,
                                eval_strategy: str = "auto",
                                max_store_bytes: int | None = 256 << 20,
+                               devices: int | str | None = "auto",
                                ) -> InferenceAccuracyEvaluator:
     """Staged-capable ΔAcc evaluator for any ``configs.ArchConfig`` LM.
 
@@ -471,15 +536,27 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
     of the corruption (the paper's INT8-class ``bits=8`` regime is
     what visibly moves token-level top-1 at smoke scale) — no separate
     ``layers.set_fault_bits`` call needed.
+
+    Enc-dec configs get the lean staged carries: the static decoder
+    input is bound into the step model (closed over by the first
+    decoder unit's executable, never threaded through the encoder
+    carries) and the encoder memory is interned by encoder prefix
+    (``shared_carry_fields={"mem": n_enc_layers - 1}``), so the
+    activation store pays for it once per encoder prefix instead of
+    once per (prefix × unit) — the ROADMAP enc-dec open item,
+    pinned by tests/test_sharded_eval.py.
     """
     from repro.models.transformer import LMStepModel
-    sm = LMStepModel(cfg, bits=spec.bits, faulty_bits=spec.faulty_bits)
+    sm = LMStepModel(cfg, bits=spec.bits, faulty_bits=spec.faulty_bits,
+                     batch=batch if cfg.is_encdec else None)
+    shared = {"mem": cfg.n_enc_layers - 1} if cfg.is_encdec else None
     return InferenceAccuracyEvaluator(
         sm.apply, sm.unit_params(params), batch, labels, spec,
         device_fault_scale, base_seed=base_seed,
         eval_batch_size=eval_batch_size, step_fn=sm.step,
         eval_strategy=eval_strategy, n_units=sm.n_units,
-        max_store_bytes=max_store_bytes)
+        max_store_bytes=max_store_bytes, devices=devices,
+        shared_carry_fields=shared)
 
 
 class SurrogateAccuracyEvaluator:
@@ -529,7 +606,9 @@ class ObjectiveFn:
     probe its compiled memory footprint and size the chunk itself.
     ``eval_strategy`` follows the same override-or-leave-alone rule:
     ``"staged"`` / ``"full"`` select the ΔAcc execution path on
-    evaluators that support it (see InferenceAccuracyEvaluator).
+    evaluators that support it (see InferenceAccuracyEvaluator), and
+    ``devices`` (``"auto"`` or a count) selects how many local devices
+    the ΔAcc dispatches shard over — placement never changes results.
     """
 
     cost_model: CostModel
@@ -538,10 +617,15 @@ class ObjectiveFn:
     energy_weight: float = 1.0
     eval_batch_size: int | str | None = None
     eval_strategy: str | None = None
+    devices: int | str | None = None
 
     def __post_init__(self):
-        # strategy first: eval_batch_size="auto" sizes its chunk against
-        # the strategy in effect (staged reserves the activation store)
+        # devices first (eval_batch_size="auto" budgets per device),
+        # then strategy (staged reserves the activation store), then
+        # the chunk size that depends on both
+        if (self.devices is not None
+                and hasattr(self.acc_evaluator, "devices")):
+            self.acc_evaluator.devices = self.devices
         if (self.eval_strategy is not None
                 and hasattr(self.acc_evaluator, "eval_strategy")):
             self.acc_evaluator.eval_strategy = self.eval_strategy

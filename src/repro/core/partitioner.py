@@ -82,7 +82,8 @@ class _BasePartitioner:
                  nsga2_config: NSGA2Config = NSGA2Config(),
                  batch: int = 1,
                  eval_batch_size: int | str | None = None,
-                 eval_strategy: str | None = None):
+                 eval_strategy: str | None = None,
+                 eval_devices: int | str | None = None):
         self.layers = layers
         self.devices = devices
         self.fault_spec = fault_spec
@@ -91,16 +92,20 @@ class _BasePartitioner:
                                     include_link_costs=self.include_link_costs,
                                     batch=batch)
         # eval_batch_size caps chromosomes per ΔAcc device dispatch
-        # (memory knob, "auto" probes the compiled footprint) and
-        # eval_strategy selects staged prefix-reuse vs full forward;
-        # neither ever changes results — see core/eval_engine.py
+        # (memory knob, "auto" probes the compiled footprint),
+        # eval_strategy selects staged prefix-reuse vs full forward,
+        # and eval_devices shards ΔAcc dispatches over local devices
+        # (named eval_* because `devices` here is the PARTITIONING
+        # target ladder); none of them ever changes results — see
+        # core/eval_engine.py
         self.objective = ObjectiveFn(
             self.cost_model,
             acc_evaluator if self.uses_accuracy else None,
             latency_weight=self.latency_weight,
             energy_weight=self.energy_weight,
             eval_batch_size=eval_batch_size,
-            eval_strategy=eval_strategy)
+            eval_strategy=eval_strategy,
+            devices=eval_devices)
 
     uses_accuracy = False
 
@@ -175,7 +180,8 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
                    nsga2_config: NSGA2Config = NSGA2Config(),
                    batch: int = 1,
                    eval_batch_size: int | str | None = None,
-                   eval_strategy: str | None = None) -> AFarePart:
+                   eval_strategy: str | None = None,
+                   eval_devices: int | str | None = None) -> AFarePart:
     """:class:`AFarePart` over an LM config's layer graph — one call,
     no CNN/LM split.
 
@@ -201,4 +207,4 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
     return AFarePart(layers, devices, fault_spec=fault_spec,
                      acc_evaluator=acc_evaluator, nsga2_config=nsga2_config,
                      batch=batch, eval_batch_size=eval_batch_size,
-                     eval_strategy=eval_strategy)
+                     eval_strategy=eval_strategy, eval_devices=eval_devices)

@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "mesh_axes"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_eval_mesh",
+           "mesh_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,6 +25,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over the real local device(s) for CPU tests."""
     return jax.make_mesh(shape, axes)
+
+
+def make_eval_mesh(n_devices: int):
+    """(data=n, model=1) mesh over the first ``n_devices`` LOCAL
+    devices — the evaluation engine's device pool
+    (``core/eval_engine.DeviceScheduler``).  Unlike
+    :func:`make_test_mesh` this may enumerate a subset of the host's
+    devices (``devices=N`` on the evaluator with more chips present),
+    so the device list is passed explicitly; the mesh is the one
+    agreement between the eval engines and the launch stack on device
+    order."""
+    return jax.make_mesh((n_devices, 1), ("data", "model"),
+                         devices=jax.local_devices()[:n_devices])
 
 
 def mesh_axes(mesh) -> tuple[str, ...]:

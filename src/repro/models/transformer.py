@@ -424,10 +424,16 @@ class LMStepModel:
     sees inside the scan, so corruption is bit-identical.
 
     Activations between units are pytrees: plain ``[B,S,D]`` hidden
-    states for decoder-only stacks; enc-dec threads the (static)
-    decoder input batch through the encoder units and the encoder
-    memory through the decoder units as extra dict entries.  The
-    prefix-reuse engine stores/stacks pytrees transparently.
+    states for decoder-only stacks.  Enc-dec carries are LEAN: the
+    encoder units carry only the encoder hidden state, the last encoder
+    unit emits the memory, and the decoder units carry
+    ``{"x": hidden, "mem": memory}``.  The STATIC decoder input batch
+    is never threaded — enc-dec models must be constructed with
+    ``batch=`` (the fixed calibration batch of a search) which the
+    first decoder unit closes over, so the staged engine's activation
+    store never pays for it, and the engine interns ``"mem"`` by
+    encoder prefix (``core.eval_engine.PrefixRef``) so the memory is
+    stored once per encoder prefix, not once per (prefix × unit).
 
     ``bits``/``faulty_bits`` pin the fixed-point fault width for this
     model's corruption (e.g. from ``FaultSpec.bits``); None inherits
@@ -435,12 +441,20 @@ class LMStepModel:
     """
 
     def __init__(self, cfg: ArchConfig, bits: int | None = None,
-                 faulty_bits: int | None = None):
+                 faulty_bits: int | None = None, batch: dict | None = None):
         self.cfg = cfg
         self.fault_bits = None if bits is None and faulty_bits is None \
             else (bits, faulty_bits)
         self.n_units = (cfg.n_enc_layers + cfg.n_layers) if cfg.is_encdec \
             else cfg.n_layers
+        if cfg.is_encdec and batch is None:
+            raise ValueError(
+                "enc-dec LMStepModel needs the (static) calibration "
+                "batch bound at construction: LMStepModel(cfg, "
+                "batch=batch) — the decoder input is closed over by "
+                "the first decoder unit instead of threaded through "
+                "the encoder carries")
+        self._batch = batch
 
     # -- structure ----------------------------------------------------------
     def unit_kind(self, i: int) -> str:
@@ -517,29 +531,67 @@ class LMStepModel:
 
     @staticmethod
     def _dec_input(batch) -> dict:
-        """The decoder-side input entries of an enc-dec batch/carry —
+        """The decoder-side input entries of an enc-dec batch —
         {"tokens"} or the stub-frontend {"embeds"}, whichever exists."""
         return {k: batch[k] for k in ("tokens", "embeds") if k in batch}
 
+    def _check_dec_input(self, x):
+        """Enc-dec evaluates the BOUND batch's decoder input (closed
+        over by the first decoder unit); a different decoder input in
+        the ``apply``/``step(0)`` argument would be silently ignored —
+        refuse it instead.  Identity covers the evaluator paths (one
+        batch object per search); concrete equal copies are accepted."""
+        for k in ("tokens", "embeds"):
+            a, b = x.get(k), self._batch.get(k)
+            if a is b:
+                continue
+            if isinstance(a, jax.core.Tracer) \
+                    or isinstance(b, jax.core.Tracer):
+                raise ValueError(
+                    f"enc-dec step/apply received decoder input {k!r} "
+                    f"as a traced value, which cannot be checked "
+                    f"against the batch bound at construction — the "
+                    f"decoder reads the BOUND batch (a compile-time "
+                    f"constant), so pass the bound batch by closure "
+                    f"instead of as a jit argument")
+            if (a is not None and b is not None
+                    and getattr(a, "shape", None) == getattr(b, "shape", ())
+                    and bool(jnp.all(jnp.asarray(a) == jnp.asarray(b)))):
+                continue
+            raise ValueError(
+                f"enc-dec step/apply received a decoder input {k!r} "
+                f"that differs from the batch bound at construction — "
+                f"the decoder reads the BOUND batch, so this call "
+                f"would silently mix batches; rebuild the LMStepModel "
+                f"with batch=<this batch>")
+
     def _step_encdec(self, i: int, p: Params, x, fr):
+        """Lean enc-dec carries: enc hidden ``[B,Se,D]`` through the
+        encoder units (unit 0 takes the batch dict, the last enc unit
+        emits the memory), ``{"x", "mem"}`` through the decoder units.
+        The decoder input comes from the bound calibration batch, never
+        from the carry."""
         cfg = self.cfg
         ne = cfg.n_enc_layers
         if i < ne:
             if i == 0:
-                x = {"enc": x["enc_embeds"], **self._dec_input(x)}
-            enc = x["enc"]
+                self._check_dec_input(x)
+                x = x["enc_embeds"]
+            enc = x
             positions = jnp.arange(enc.shape[1], dtype=jnp.int32)
             enc = _enc_block_fwd(cfg, p["block"], enc, positions,
                                  fault_rates=fr,
                                  fault_bits=self.fault_bits)
             if i == ne - 1:
-                mem = L.norm_fwd(p["enc_norm"], enc, cfg.norm_kind)
-                return {"mem": mem, **self._dec_input(x)}
-            return {"enc": enc, **self._dec_input(x)}
+                return L.norm_fwd(p["enc_norm"], enc, cfg.norm_kind)
+            return enc
         j = i - ne
         if j == 0:
-            x = {"x": _embed_batch(cfg, p["embed"], self._dec_input(x)),
-                 "mem": x["mem"]}
+            # x is the encoder memory; the static decoder input is the
+            # bound batch (constant-folded into the unit's executable)
+            x = {"x": _embed_batch(cfg, p["embed"],
+                                   self._dec_input(self._batch)),
+                 "mem": x}
         h, mem = x["x"], x["mem"]
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
         mem_pos = jnp.arange(mem.shape[1], dtype=jnp.int32)

@@ -56,7 +56,9 @@ def _setup(arch):
     if arch not in _SETUPS:
         cfg = get_config(arch).reduced()
         params, batch, labels = lm_calibration_setup(cfg, B=B, S=S)
-        sm = LMStepModel(cfg)
+        # enc-dec binds the static calibration batch (the decoder input
+        # is closed over by the first decoder unit, not threaded)
+        sm = LMStepModel(cfg, batch=batch if cfg.is_encdec else None)
         _SETUPS[arch] = (cfg, sm, sm.unit_params(params), params, batch,
                          labels)
     return _SETUPS[arch]
@@ -181,7 +183,7 @@ def test_encdec_embeds_batch_staged_matches_full():
                                    jnp.float32),
              "enc_embeds": tok_batch["enc_embeds"]}
     labels = jnp.argmax(forward(params, cfg, batch), -1)
-    n = LMStepModel(cfg).n_units
+    n = LMStepModel(cfg, batch=batch).n_units
     P = np.random.default_rng(1).integers(0, 2, size=(4, n))
     ref = make_lm_accuracy_evaluator(cfg, params, batch, labels, SPEC,
                                      SCALE, eval_strategy="full"
