@@ -46,6 +46,18 @@ tiers) and writes results/bench/prefix_reuse_lm.json.  Its ``--smoke``
 guard is stricter: the replay must avoid >= 30 % of the unit runs the
 full-forward path would execute (ISSUE 3 acceptance criterion).
 
+``--fused`` runs ONLY the chain-fusion comparison (``run_chain_fusion``):
+the converged pop-60 replay — a deep reduced LM (24 units), converged
+survivors plus point mutants per round, the online-reoptimisation
+regime where the prefix trie is mostly non-branching chains — through
+the staged path with ``fuse_chains=False`` vs ``True``, bit-identical
+per round, writing results/bench/chain_fusion.json.  Its ``--smoke``
+guards fail if the fused path issues more than HALF the unfused path's
+engine dispatches (ISSUE 5 acceptance criterion) or exceeds the
+span-ladder dispatch bound
+``branch_nodes + chains x ceil(log2(max_chain))``.  Combine with
+``--lm ARCH`` to pick a different architecture.
+
 The default configuration is the *dispatch-bound* regime — a small
 calibration batch, the regime an edge-accelerator deployment sees where
 a forward pass is microseconds and per-candidate dispatch overhead
@@ -223,6 +235,11 @@ def _trace_nsga2(layers, devices, pop, gens, seed):
     return trace
 
 
+# lifetime gauges (running maxima), not cumulative counters: reported
+# as-is by _replay instead of as warm-vs-timed deltas
+_GAUGES = {"max_chain"}
+
+
 def _replay(ev, trace, clear, stats_fn):
     """Warm every bucket shape, drop caches, then time a full replay of
     the traced population sequence; returns (seconds, values, counter
@@ -238,7 +255,8 @@ def _replay(ev, trace, clear, stats_fn):
     for P in trace:
         vals.append(ev.delta_acc(P))
     dt = time.perf_counter() - t0
-    stats = {k: v - before[k] if isinstance(v, int) else v
+    stats = {k: v - before[k]
+             if isinstance(v, int) and k not in _GAUGES else v
              for k, v in stats_fn().items()}
     if "prefix_hits" in stats:
         needed = stats["unit_runs"] - stats["recomputes"] \
@@ -371,6 +389,116 @@ def run_generational(model_name: str = "alexnet", pop: int = 60,
     return rec
 
 
+def run_chain_fusion(arch: str = "olmo-1b", n_units: int = 24,
+                     pop: int = 60, rounds: int = 20, n_mut: int = 6,
+                     B: int = 2, S: int = 8, seed: int = 0,
+                     devices: int | str = "auto") -> dict:
+    """Chain-fused vs unfused staged dispatch on the converged pop-60
+    replay (ISSUE 5).
+
+    The regime chain fusion targets: a DEEP model (the arch's reduced
+    config deepened to ``n_units`` partitionable layers — reduced width
+    keeps every unit CPU-cheap, so per-DISPATCH overhead dominates) and
+    a CONVERGED population, whose prefix trie is mostly non-branching
+    chains.  The scenario first converges a surrogate-driven NSGA-II
+    search (``_trace_nsga2``) to obtain the converged pop-60, then
+    replays the online-reoptimisation tail the paper's runtime phase
+    produces: each round re-evaluates a population drawn from the
+    converged survivors plus ``n_mut`` point mutants.  The unfused
+    depth walk pays one dispatch per fresh depth per round (the whole
+    mutated suffix, up to L); the fused walk pays the buddy-ladder
+    pieces of the mutants' chains (~log L, shared across mutants).
+
+    Both paths replay the identical trace, asserted bit-identical per
+    round; dispatch counts, wall clock and the fused engine's chain
+    accounting are reported.
+
+    Guards (applied by ``--smoke --fused``):
+      * the fused replay must issue <= HALF the unfused replay's
+        engine dispatches (the ISSUE 5 acceptance criterion), and
+      * fused dispatches must not exceed the span-ladder bound
+        ``branch_nodes + chains × max(1, ceil(log2(max_chain)))``
+        (valid for this scenario's unchunked dispatches: each chain
+        compiles to at most ~2·ceil(log2(max_chain)) ladder pieces and
+        ``(start, length)`` grouping only merges dispatches).
+    """
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import FaultSpec
+    from repro.core.costmodel import POD_TIERS_4
+    from repro.core.objectives import make_lm_accuracy_evaluator
+    from repro.models.graph import lm_layer_infos
+    from repro.testing.lm_harness import lm_calibration_setup
+
+    cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=n_units)
+    scale = np.array([d.fault_scale for d in POD_TIERS_4])
+    D = len(scale)
+    spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2, bits=8)
+
+    # converge a surrogate-driven search, then build the mutation tail
+    infos = lm_layer_infos(cfg, seq=S)
+    search = _trace_nsga2(infos, POD_TIERS_4, pop, 12, seed)
+    base = np.unique(np.asarray(search[-1]), axis=0)
+    rng = np.random.default_rng(seed)
+    trace = [base[rng.integers(0, len(base), size=pop)].copy()]
+    for _ in range(rounds):
+        P = base[rng.integers(0, len(base), size=pop)].copy()
+        mut = rng.integers(0, pop, size=n_mut)
+        P[mut, rng.integers(0, n_units, size=n_mut)] = \
+            rng.integers(0, D, size=n_mut)
+        trace.append(P)
+
+    params, batch, labels = lm_calibration_setup(cfg, B=B, S=S, seed=seed)
+
+    def fresh(fused):
+        return make_lm_accuracy_evaluator(
+            cfg, params, batch, labels, spec, scale,
+            eval_strategy="staged", fuse_chains=fused, devices=devices)
+
+    ev_uf = fresh(fused=False)
+    t_uf, v_uf, st_uf = _replay(ev_uf, trace, ev_uf._prefix_engine.clear,
+                                ev_uf.staged_stats)
+    ev_f = fresh(fused=True)
+    t_f, v_f, st_f = _replay(ev_f, trace, ev_f._prefix_engine.clear,
+                             ev_f.staged_stats)
+    for g, (a, b) in enumerate(zip(v_uf, v_f)):
+        assert (a == b).all(), f"fused != unfused at round {g}"
+
+    max_chain = max(st_f["max_chain"], 1)
+    ladder_bound = st_f["branch_nodes"] + st_f["chains"] * max(
+        1, (max_chain - 1).bit_length())
+    candidates = pop * (rounds + 1)
+    return {
+        "config": {"arch": arch, "reduced": True, "n_units": n_units,
+                   "pop": pop, "rounds": rounds, "n_mut": n_mut,
+                   "B": B, "S": S, "seed": seed, "n_devices": D,
+                   "fault_bits": 8, "eval_devices": ev_f.devices},
+        "candidates": candidates,
+        "base_rows": len(base),
+        "dispatches": {"unfused": st_uf["dispatches"],
+                       "fused": st_f["dispatches"]},
+        "dispatch_ratio": st_uf["dispatches"] / max(st_f["dispatches"], 1),
+        "ladder_bound": ladder_bound,
+        "per_candidate_ms": {
+            "unfused": t_uf / candidates * 1e3,
+            "fused": t_f / candidates * 1e3,
+        },
+        "fused_speedup_vs_unfused": t_uf / t_f,
+        "unit_runs": {"unfused": st_uf["unit_runs"],
+                      "fused": st_f["unit_runs"]},
+        "chains": st_f["chains"],
+        "fused_segments": st_f["fused_segments"],
+        "branch_nodes": st_f["branch_nodes"],
+        "max_chain": st_f["max_chain"],
+        "unstack_slices_saved": {
+            "unfused": st_uf["unstack_slices_saved"],
+            "fused": st_f["unstack_slices_saved"]},
+        "unfused_stats": st_uf,
+        "fused_stats": st_f,
+    }
+
+
 def run_lm_generational(arch: str = "olmo-1b", pop: int = 24,
                         gens: int = 8, B: int = 2, S: int = 16,
                         seed: int = 0,
@@ -483,6 +611,16 @@ def main():
                          "(compute-bound regime where unit runs dominate)")
     ap.add_argument("--skip-generational", action="store_true",
                     help="only run the single-population microbenchmark")
+    ap.add_argument("--fused", action="store_true",
+                    help="run ONLY the chain-fusion comparison: the "
+                         "converged pop-60 replay (24-unit reduced LM, "
+                         "survivors + point mutants) through the "
+                         "staged path unfused vs fused, reporting "
+                         "dispatch counts and wall-clock (writes "
+                         "chain_fusion.json; with --smoke, fails "
+                         "unless fused dispatches are <= half the "
+                         "unfused count and within the span-ladder "
+                         "bound; --lm ARCH picks the architecture)")
     ap.add_argument("--lm", metavar="ARCH", default=None,
                     help="run ONLY the transformer generational replay "
                          "on this arch's reduced config (writes "
@@ -502,6 +640,41 @@ def main():
     ebs = parse_eval_batch_size(args.eval_batch_size)
     dev = parse_devices(args.devices)
     dev = "auto" if dev is None else dev
+
+    if args.fused:
+        rec = run_chain_fusion(arch=args.lm or "olmo-1b", pop=args.pop,
+                               devices=dev)
+        d = rec["dispatches"]
+        print("# benchmark,us_per_call,derived")
+        print(f"eval_engine.chain_fusion_unfused,"
+              f"{rec['per_candidate_ms']['unfused']*1e3:.0f},"
+              f"dispatches={d['unfused']}")
+        print(f"eval_engine.chain_fusion_fused,"
+              f"{rec['per_candidate_ms']['fused']*1e3:.0f},"
+              f"speedup={rec['fused_speedup_vs_unfused']:.2f}x "
+              f"dispatches={d['fused']} "
+              f"ratio={rec['dispatch_ratio']:.2f}x "
+              f"ladder_bound={rec['ladder_bound']} "
+              f"chains={rec['chains']} segments={rec['fused_segments']} "
+              f"slices_saved={rec['unstack_slices_saved']['fused']}")
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "chain_fusion.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(f"# wrote {out}")
+        if args.smoke and d["fused"] * 2 > d["unfused"]:
+            print(f"FAIL: fused staged replay issued {d['fused']} "
+                  f"dispatches, more than half the unfused path's "
+                  f"{d['unfused']} — chain fusion stopped collapsing "
+                  f"the converged-pop prefix runs")
+            sys.exit(1)
+        if args.smoke and d["fused"] > rec["ladder_bound"]:
+            print(f"FAIL: fused staged replay issued {d['fused']} "
+                  f"dispatches, over the span-ladder bound "
+                  f"branch_nodes + chains x ceil(log2(max_chain)) = "
+                  f"{rec['ladder_bound']}")
+            sys.exit(1)
+        return rec
 
     if args.lm:
         rec = run_lm_generational(arch=args.lm, pop=args.lm_pop,

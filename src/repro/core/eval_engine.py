@@ -13,13 +13,19 @@ every population-side concern of that loop, stacked in three layers:
    chunks are padded (by repeating the last row) to a small set of
    static shapes so XLA compiles O(log N) variants.
 
-2. **Prefix engine** (:class:`PrefixEvalEngine`, PRs 2-3) — the staged
-   path.  A chromosome's corrupted activation after unit *i* depends
-   only on genes ``P[0..i]``, so the engine walks the model depth by
-   depth, evaluating each unique gene *prefix* once, with an
-   LRU-bounded :class:`ActivationStore` (eviction falls back to
-   recompute, never to wrong results).  Per-generation cost scales
-   with unique prefixes, not ``unique_rows × L``.
+2. **Prefix engine** (:class:`PrefixEvalEngine`, PRs 2-3, 5) — the
+   staged path.  A chromosome's corrupted activation after unit *i*
+   depends only on genes ``P[0..i]``, so the engine evaluates each
+   unique gene *prefix* once, with an LRU-bounded
+   :class:`ActivationStore` (eviction falls back to recompute, never
+   to wrong results).  Per-generation cost scales with unique
+   prefixes, not ``unique_rows × L``.  With a ``segment_fn`` (PR 5,
+   the default through ``InferenceAccuracyEvaluator``) the walk is
+   *chain-fused*: maximal non-branching runs of the prefix trie
+   dispatch as single fused segment executables instead of one
+   dispatch per unit per depth, and dispatch outputs stay stacked in
+   the store as :class:`StackedView` entries instead of being
+   unstacked row by row.
 
 3. **Device scheduler** (:class:`DeviceScheduler`, PR 4) — the sharded
    path.  Both engines accept a scheduler that places their dispatch
@@ -57,7 +63,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 __all__ = ["PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
-           "DeviceScheduler", "PrefixRef",
+           "DeviceScheduler", "PrefixRef", "StackedView",
            "chunked_rows", "bucket_size", "pad_rows",
            "auto_eval_batch_size", "device_memory_budget",
            "peak_memory_bytes", "parse_eval_batch_size", "parse_devices"]
@@ -214,10 +220,74 @@ class PrefixRef:
         return f"PrefixRef({self.prefix!r})"
 
 
+class _StackedBatch:
+    """One dispatch's stacked ``[U, ...]`` output pytree, kept whole.
+
+    The staged engine used to unstack every dispatch output row by row
+    (``jax.tree.map(lambda a: a[j])`` per surviving prefix — one device
+    dispatch per row per leaf).  Now the batch stays intact and the
+    :class:`ActivationStore` holds per-row :class:`StackedView` entries
+    into it; slicing is deferred to first materialisation, and
+    consumers that read a whole chunk from one batch *gather*
+    (``a[idx]``, one dispatch) instead of slicing per row.
+    """
+
+    __slots__ = ("tree", "n", "row_nbytes")
+
+    def __init__(self, tree, n: int):
+        self.tree = tree
+        self.n = n
+        total = 0
+        import jax
+        for a in jax.tree.leaves(tree):
+            if hasattr(a, "dtype"):
+                total += (int(np.prod(a.shape[1:])) * a.dtype.itemsize
+                          if a.ndim > 1 else a.dtype.itemsize)
+        self.row_nbytes = total
+
+    @property
+    def total_nbytes(self) -> int:
+        return self.row_nbytes * self.n
+
+
+class StackedView:
+    """Store entry: row ``index`` of a :class:`_StackedBatch`.
+
+    Owns no buffer of its own; the store charges the WHOLE batch when
+    its first view enters and releases it when its last view leaves
+    (:meth:`ActivationStore._entry_bytes_add`) — the batch buffer is
+    retained as long as any sibling view survives, so batch-level
+    accounting is the real residency and the LRU budget stays honest
+    under partial eviction.  The first materialisation memoises its
+    slice, so a parent consumed repeatedly across dispatch groups pays
+    one slice dispatch total, like the eager store did (the memoised
+    copy is small — one row — and dies with the view).
+    """
+
+    __slots__ = ("batch", "index", "_sliced")
+
+    def __init__(self, batch: _StackedBatch, index: int):
+        self.batch = batch
+        self.index = index
+        self._sliced = None
+
+    def materialize(self):
+        import jax
+
+        if self._sliced is None:
+            self._sliced = jax.tree.map(lambda a: a[self.index],
+                                        self.batch.tree)
+        return self._sliced
+
+    def __repr__(self):
+        return f"StackedView(row {self.index} of [{self.batch.n}, ...])"
+
+
 def _nbytes(act) -> int:
     """Buffer bytes of an activation (array or pytree — the LM units
     thread dicts of hidden state + shared-carry refs) without forcing a
-    transfer."""
+    transfer.  :class:`StackedView` entries are accounted at the batch
+    level by the store (``_entry_bytes_add``), not here."""
     import jax
 
     total = 0
@@ -246,6 +316,13 @@ class ActivationStore:
         self._store: OrderedDict[tuple, object] = OrderedDict()
         self.nbytes = 0
         self.evictions = 0
+        # stacked-batch residency: id(batch) -> (live view count, bytes).
+        # A batch is charged once when its first view enters and
+        # released when its last view leaves — evicting one view of a
+        # still-referenced batch frees nothing real, and the accounting
+        # says so (ids stay valid because a counted batch is kept alive
+        # by its remaining views)
+        self._batch_views: dict[int, list] = {}
 
     def __len__(self) -> int:
         return len(self._store)
@@ -264,9 +341,37 @@ class ActivationStore:
             self._store.move_to_end(key)
             return
         self._store[key] = act
-        self.nbytes += _nbytes(act)
+        self.nbytes += self._entry_bytes_add(act)
         if self.max_bytes is not None:
             self._evict(pinned)
+
+    def _entry_bytes_add(self, act) -> int:
+        """Bytes newly resident because of this entry: eager entries
+        own their leaves, a :class:`StackedView` charges its whole
+        batch iff it is the batch's first stored view."""
+        if isinstance(act, StackedView):
+            rec = self._batch_views.get(id(act.batch))
+            if rec is None:
+                self._batch_views[id(act.batch)] = \
+                    [1, act.batch.total_nbytes]
+                return act.batch.total_nbytes
+            rec[0] += 1
+            return 0
+        return _nbytes(act)
+
+    def _entry_bytes_drop(self, act) -> int:
+        """Bytes actually freed by dropping this entry (a batch is
+        freed only with its LAST stored view)."""
+        if isinstance(act, StackedView):
+            rec = self._batch_views.get(id(act.batch))
+            if rec is None:
+                return 0
+            rec[0] -= 1
+            if rec[0] <= 0:
+                del self._batch_views[id(act.batch)]
+                return rec[1]
+            return 0
+        return _nbytes(act)
 
     def _evict(self, pinned):
         for key in list(self._store):
@@ -274,13 +379,14 @@ class ActivationStore:
                 return
             if key in pinned:
                 continue
-            self.nbytes -= _nbytes(self._store.pop(key))
+            self.nbytes -= self._entry_bytes_drop(self._store.pop(key))
             self.evictions += 1
         # everything left is pinned: allow a transient overshoot rather
         # than evict activations the current depth is about to read
 
     def clear(self):
         self._store.clear()
+        self._batch_views.clear()
         self.nbytes = 0
 
 
@@ -346,13 +452,38 @@ class PrefixEvalEngine:
     true for the enc-dec encoder memory, which IS the last encoder
     unit's output).  Stored activations deeper than that depth carry a
     :class:`PrefixRef` instead of the payload.
+
+    Chain fusion (``segment_fn``, PR 5): a converging population's
+    prefix trie degenerates to long NON-BRANCHING runs — with the
+    depth-by-depth walk each run costs one tiny dispatch per unit plus
+    per-row unstacking between depths, which is exactly the
+    dispatch-bound regime on deep models.  When ``segment_fn(start,
+    length)`` is provided, :meth:`_run_rows` plans maximal
+    single-child chains over the fresh rows' trie and dispatches each
+    as ONE fused ``jit(vmap)`` executable composing units
+    ``start..start+length-1`` (callable contract:
+    ``fn(parent_acts, genes[U, length]) -> child_acts | accs``).
+    Fusion never crosses a *branch node* (a trie node with two or more
+    children — its activation is a shared parent and must
+    materialise), never crosses a ``shared_fields`` keying depth (the
+    keyed activation must be stored for :class:`PrefixRef` resolution),
+    and the final unit always dispatches as its own segment so the
+    pre-logits activation remains a stored checkpoint for
+    last-gene-mutant reuse.  Chains are cut on a buddy-aligned
+    power-of-two span ladder (``start % length == 0``), so the
+    compile-cache keys ``(start, length)`` number at most ``~2·L``
+    (< L·log2 L) and repeat across generations.  Fused and unfused
+    walks are bitwise identical — the segment executables compose the
+    exact per-unit math (tests/test_chain_fusion.py pins the
+    differential and the chain-detection rules).
     """
 
     def __init__(self, unit_fns: Sequence[Callable], n_units: int,
                  eval_batch_size: int | None = None,
                  max_store_bytes: int | None = None,
                  scheduler: DeviceScheduler | None = None,
-                 shared_fields: dict[str, int] | None = None):
+                 shared_fields: dict[str, int] | None = None,
+                 segment_fn: Callable[[int, int], Callable] | None = None):
         assert len(unit_fns) == n_units, (len(unit_fns), n_units)
         self.unit_fns = unit_fns
         self.n_units = n_units
@@ -360,6 +491,7 @@ class PrefixEvalEngine:
         self.store = ActivationStore(max_store_bytes)
         self.scheduler = scheduler
         self.shared_fields = dict(shared_fields or {})
+        self.segment_fn = segment_fn       # None => unfused depth walk
         self._root_device: dict[int, int] = {}  # depth-0 gene -> device idx
         self._cache: dict[tuple, float] = {}   # full row -> final metric
         self.dispatches = 0        # unit_fn invocations (jit dispatches)
@@ -368,6 +500,12 @@ class PrefixEvalEngine:
         self.unit_runs = 0         # unit executions actually performed
         self.prefix_hits = 0       # needed prefixes found in the store
         self.recomputes = 0        # unit runs redone after LRU eviction
+        self.views_stored = 0      # activations stored as StackedViews
+        self.slices_materialized = 0  # views actually sliced out later
+        self.chains = 0            # fused chains planned (incl. finals)
+        self.fused_segments = 0    # ladder segments dispatched
+        self.branch_nodes = 0      # trie nodes with >= 2 children seen
+        self.max_chain = 0         # longest chain planned (pre-ladder)
 
     # -- derived stats -------------------------------------------------------
     @property
@@ -398,6 +536,15 @@ class PrefixEvalEngine:
             "device_dispatches": dict(self.device_dispatches),
             "store_entries": len(self.store),
             "store_bytes": self.store.nbytes,
+            # chain fusion + stacked-view accounting (PR 5)
+            "chains": self.chains,
+            "fused_segments": self.fused_segments,
+            "branch_nodes": self.branch_nodes,
+            "max_chain": self.max_chain,
+            "views_stored": self.views_stored,
+            "slices_materialized": self.slices_materialized,
+            "unstack_slices_saved":
+                self.views_stored - self.slices_materialized,
         }
 
     def clear(self):
@@ -450,13 +597,21 @@ class PrefixEvalEngine:
         return self._root_device[root]
 
     def _run_rows(self, R: np.ndarray):
-        """Walk unique uncached rows depth by depth.  Final-depth chunk
-        results are gathered AFTER the whole walk has been dispatched
-        (jax dispatch is async, so with a multi-device scheduler the
-        per-device chunk streams execute concurrently)."""
+        """Evaluate unique uncached rows: the chain-fused walk when a
+        ``segment_fn`` is attached, the depth-by-depth walk otherwise.
+        Both gather final-depth chunk results AFTER every dispatch has
+        been issued (jax dispatch is async, so with a multi-device
+        scheduler the per-device chunk streams execute concurrently)."""
+        self.rows_evaluated += len(R)
+        if self.segment_fn is not None:
+            self._run_rows_fused(R)
+        else:
+            self._run_rows_staged(R)
+
+    def _run_rows_staged(self, R: np.ndarray):
+        """The PR-2 depth walk: one dispatch group per (depth, device)."""
         L = self.n_units
         sched = self._multi()
-        self.rows_evaluated += len(R)
         pending: list[tuple[list, list]] = []   # (prefixes, result chunks)
         for i in range(L):
             last = i == L - 1
@@ -485,22 +640,181 @@ class PrefixEvalEngine:
             pin = set(prefixes)
             for dev_idx, group in groups:
                 parents = None if i == 0 else \
-                    [self._ensure_act(p[:-1]) for p in group]
-                devs = np.array([p[-1] for p in group], np.int64)
-                outs = self._dispatch_depth(i, parents, devs, final=last,
-                                            dev_idx=dev_idx)
+                    [self._parent_for(p[:-1]) for p in group]
+                devs = np.array([[p[-1]] for p in group], np.int64)
+                outs = self._dispatch_group(
+                    self.unit_fns[i], parents, devs, final=last,
+                    dev_idx=dev_idx, unit_axis=False)
                 if last:
                     pending.append((group, outs))
                 else:
-                    for p, a in zip(group, outs):
-                        self.store.put(p, self._intern(p, a), pinned=pin)
+                    self._store_group(group, outs, pin)
                 self.unit_runs += len(group)
-        for group, chunks in pending:       # the once-per-call gather:
-            i = 0                           # one host transfer per chunk
+        self._gather_final(pending)
+
+    # -- chain-fused walk (PR 5) --------------------------------------------
+    def _run_rows_fused(self, R: np.ndarray):
+        """Plan non-branching chains over the fresh rows' prefix trie
+        and dispatch each buddy-aligned ``(start, length)`` segment
+        group as one fused executable (see the class docstring)."""
+        L = self.n_units
+        sched = self._multi()
+        segments = self._plan_segments([self.key(row) for row in R])
+        groups: dict[tuple, list] = {}
+        for seg in segments:
+            start, length, parent, genes = seg
+            dev_idx = None if sched is None \
+                else self._device_index(parent + genes)
+            groups.setdefault((start, length, dev_idx), []).append(seg)
+        pending: list[tuple[list, list]] = []
+        # ascending start: every parent-producing segment (ending at
+        # start-1) has start' < start, so dependencies are satisfied
+        order = sorted(groups, key=lambda t: (
+            t[0], t[1], -1 if t[2] is None else t[2]))
+        for key in order:
+            start, length, dev_idx = key
+            segs = groups[key]
+            final = start + length == L
+            fn = self.segment_fn(start, length)
+            parents = None if start == 0 else \
+                [self._parent_for(s[2]) for s in segs]
+            genes = np.array([s[3] for s in segs], np.int64)  # [U, length]
+            outs = self._dispatch_group(fn, parents, genes, final=final,
+                                        dev_idx=dev_idx, unit_axis=True)
+            keys = [s[2] + s[3] for s in segs]     # segment end prefixes
+            if final:
+                pending.append((keys, outs))
+            else:
+                # pin only the keys being stored (the depth walk's
+                # semantics): an evicted parent re-enters through the
+                # recompute fallback, so a tight budget stays tight
+                # instead of pinning every pending parent
+                self._store_group(keys, outs, set(keys))
+            self.unit_runs += len(segs) * length
+            self.fused_segments += len(segs)
+        self._gather_final(pending)
+
+    def _plan_segments(self, rows: list) -> list:
+        """Plan the fused walk: ``[(start, length, parent_prefix,
+        genes)]`` covering every unit run the fresh ``rows`` need.
+
+        1. Build the rows' prefix trie (insertion order = population
+           order, so device assignment stays deterministic).
+        2. Per row, resume from the DEEPEST stored prefix (one
+           ``prefix_hits`` count per unique resume point); everything
+           below it down to depth L-2 is *needed*.
+        3. Extract maximal chains: a chain extends through nodes with
+           exactly one needed child and stops at branch nodes (>= 2
+           children — never fused across), at ``shared_fields`` keying
+           depths (the keyed activation must be stored), and before the
+           final unit (each row's final unit is its own segment so the
+           pre-logits checkpoint stays stored).
+        4. Split each chain on the buddy-aligned power-of-two span
+           ladder: each piece takes the largest power-of-two length
+           that divides its start (any length at start 0) and fits the
+           remainder.  At most ``2·ceil(log2(m))`` pieces per chain,
+           and the piece boundaries are CANONICAL depths — mutants in
+           later generations resume at the same aligned checkpoints
+           and their pieces merge into the same ``(start, length)``
+           dispatch groups.  Compile keys number at most ``~2·L``
+           (< the L·log2 L ladder bound).
+        """
+        L = self.n_units
+        kids: dict[tuple, dict] = {(): {}}
+        for r in rows:
+            p = ()
+            for g in r:
+                kids.setdefault(p, {}).setdefault(g, None)
+                p += (g,)
+            kids.setdefault(p, {})
+        self.branch_nodes += sum(1 for c in kids.values() if len(c) >= 2)
+
+        need: dict[tuple, None] = {}       # ordered set, parents first
+        hits: set = set()
+        for r in rows:
+            d = L - 1                      # deepest proper prefix to probe
+            while d > 0 and r[:d] not in self.store:
+                d -= 1
+            if d > 0 and r[:d] not in hits:
+                hits.add(r[:d])
+                self.prefix_hits += 1
+            for dd in range(d + 1, L):
+                need.setdefault(r[:dd])
+        need_children: dict[tuple, list] = {}
+        for p in need:
+            need_children.setdefault(p[:-1], []).append(p[-1])
+
+        cut = set(self.shared_fields.values())
+        chains: list[tuple[tuple, list]] = []   # (parent_prefix, genes)
+        for p in need:                     # parents precede children
+            par = p[:-1]
+            if (par in need and len(need_children.get(par, ())) == 1
+                    and (len(par) - 1) not in cut):
+                continue                   # p extends its parent's chain
+            genes = [p[-1]]
+            cur = p
+            while True:
+                nc = need_children.get(cur, ())
+                if len(nc) != 1 or (len(cur) - 1) in cut:
+                    break
+                cur += (nc[0],)
+                genes.append(nc[0])
+            chains.append((par, genes))
+            self.max_chain = max(self.max_chain, len(genes))
+        # every row's final unit: its own length-1 chain/segment
+        finals = [(r[:L - 1], [r[L - 1]]) for r in rows]
+        self.chains += len(chains) + len(finals)
+
+        segments: list[tuple[int, int, tuple, tuple]] = []
+        for par, genes in chains + finals:
+            s, m, off = len(par), len(genes), 0
+            while m:
+                ln = 1 << (m.bit_length() - 1)
+                at = s + off
+                if at:
+                    ln = min(ln, at & -at)     # buddy alignment
+                segments.append((at, ln, par + tuple(genes[:off]),
+                                 tuple(genes[off:off + ln])))
+                off += ln
+                m -= ln
+        return segments
+
+    # -- storage / materialisation -------------------------------------------
+    def _use_views(self) -> bool:
+        """Stacked views are incompatible with per-row shared-field
+        interning (a view cannot rewrite one row's carry field), so
+        engines with ``shared_fields`` (enc-dec) keep the eager store
+        layout the PrefixRef contract tests pin."""
+        return not self.shared_fields
+
+    def _store_group(self, keys: list, chunks: list, pin: set):
+        """Store one dispatch group's outputs: per-row
+        :class:`StackedView` entries into the intact batch (no unstack
+        dispatches), or eager per-row slices when shared-field
+        interning must rewrite fields."""
+        import jax
+
+        j = 0
+        for batch, n in chunks:
+            rows = keys[j:j + n]
+            if self._use_views():
+                for r, key in enumerate(rows):
+                    self.store.put(key, StackedView(batch, r), pinned=pin)
+                self.views_stored += n
+            else:
+                for r, key in enumerate(rows):
+                    act = jax.tree.map(lambda a, r=r: a[r], batch.tree)
+                    self.store.put(key, self._intern(key, act), pinned=pin)
+            j += n
+
+    def _gather_final(self, pending: list):
+        """The once-per-call gather: one host transfer per chunk."""
+        for keys, chunks in pending:
+            j = 0
             for out, n in chunks:
-                for p, v in zip(group[i:i + n], np.asarray(out)[:n]):
+                for p, v in zip(keys[j:j + n], np.asarray(out)[:n]):
                     self._cache[p] = float(v)
-                i += n
+                j += n
 
     def _intern(self, prefix: tuple, act):
         """Replace shared carry fields (deeper than their keying depth)
@@ -525,54 +839,94 @@ class PrefixEvalEngine:
         return {k: self._ensure_act(v.prefix) if isinstance(v, PrefixRef)
                 else v for k, v in act.items()}
 
-    def _ensure_act(self, prefix: tuple):
-        """Resolved activation for ``prefix``, recomputing the chain
-        from the nearest resident ancestor if LRU eviction dropped it
-        (slower, never wrong)."""
+    def _materialize(self, entry):
+        """A stored entry as a standalone activation: slice views out
+        of their batch (counted — these are the dispatches the stacked
+        store exists to avoid; memoised, so each view pays at most
+        once), resolve shared-field refs."""
+        if isinstance(entry, StackedView):
+            if entry._sliced is None:
+                self.slices_materialized += 1
+            return entry.materialize()
+        return self._resolve(entry)
+
+    def _parent_for(self, prefix: tuple):
+        """Stored entry for a parent prefix — a :class:`StackedView` is
+        returned AS-IS so chunk assembly can gather instead of slicing
+        — or the recompute fallback when LRU eviction dropped it."""
         act = self.store.get(prefix)
         if act is not None:
-            return self._resolve(act)
+            return act
+        return self._recompute(prefix)
+
+    def _ensure_act(self, prefix: tuple):
+        """Resolved standalone activation for ``prefix``, recomputing
+        the chain from the nearest resident ancestor if LRU eviction
+        dropped it (slower, never wrong)."""
+        return self._materialize(self._parent_for(prefix))
+
+    def _recompute(self, prefix: tuple):
+        """The eviction fallback: re-run unit ``len(prefix)-1`` for one
+        prefix (recursing up the chain as needed) and re-store it."""
+        import jax
+
         i = len(prefix) - 1
-        parents = None if i == 0 else [self._ensure_act(prefix[:-1])]
-        devs = np.array([prefix[-1]], np.int64)
+        parents = None if i == 0 else [self._parent_for(prefix[:-1])]
+        devs = np.array([[prefix[-1]]], np.int64)
         dev_idx = None if self._multi() is None else \
             self._device_index(prefix)
-        out = self._dispatch_depth(i, parents, devs, final=False,
-                                   dev_idx=dev_idx)
+        outs = self._dispatch_group(self.unit_fns[i], parents, devs,
+                                    final=False, dev_idx=dev_idx,
+                                    unit_axis=False)
+        batch, _ = outs[0]
+        act = jax.tree.map(lambda a: a[0], batch.tree)
         self.unit_runs += 1
         self.recomputes += 1
-        self.store.put(prefix, self._intern(prefix, out[0]),
-                       pinned={prefix})
-        return out[0]
+        self.store.put(prefix, self._intern(prefix, act), pinned={prefix})
+        return act
 
-    def _dispatch_depth(self, i: int, parents: list | None,
-                        devs: np.ndarray, final: bool,
-                        dev_idx: int | None = None) -> list:
-        """Chunked shape-bucketed dispatches of unit ``i``; returns the
-        per-prefix activation outputs (arrays/pytrees, unstacked
-        leaf-wise — units may carry arbitrary pytrees), or — at the
-        final depth — the un-synced ``(chunk_result, n_rows)`` pairs
-        the caller converts (one host transfer per chunk) after every
-        dispatch has been issued.  ``dev_idx`` commits the chunk inputs
-        to that scheduler device; parents are resident there already
-        (prefix-group invariant)."""
+    def _stack_chunk(self, parents: list, padded: int):
+        """Assemble one dispatch chunk's stacked parent activations.
+        When every parent is a view into ONE batch this is a single
+        gather (``a[idx]``) instead of per-row slice+stack dispatches —
+        identical values, O(1) dispatches instead of O(rows)."""
         import jax
         import jax.numpy as jnp
 
+        chunk = list(parents) + [parents[-1]] * (padded - len(parents))
+        if (len(chunk) > 1
+                and all(isinstance(p, StackedView) for p in chunk)
+                and all(p.batch is chunk[0].batch for p in chunk)):
+            idx = np.array([p.index for p in chunk], np.int32)
+            return jax.tree.map(lambda a: a[idx], chunk[0].batch.tree)
+        mats = [self._materialize(p) for p in chunk]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *mats)
+
+    def _dispatch_group(self, fn: Callable, parents: list | None,
+                        genes: np.ndarray, final: bool,
+                        dev_idx: int | None = None,
+                        unit_axis: bool = True) -> list:
+        """Chunked shape-bucketed dispatches of one unit or fused
+        segment over its ``[U, length]`` gene rows.  Non-final
+        dispatches return ``(_StackedBatch, n)`` per chunk (callers
+        store per-row views — no per-row unstack dispatches); the final
+        depth returns the un-synced ``(chunk_result, n)`` pairs the
+        caller converts after every dispatch has been issued.
+        ``dev_idx`` commits the chunk inputs to that scheduler device;
+        parents are resident there already (prefix-group invariant).
+        ``unit_axis=False`` strips the per-unit gene axis for the
+        single-unit ``unit_fns`` contract (``devs: [U]``)."""
+        import jax
+
         device = None if dev_idx is None else self.scheduler.devices[dev_idx]
         outs: list = []
-        for start, stop, padded in chunked_rows(len(devs),
+        for start, stop, padded in chunked_rows(len(genes),
                                                 self.eval_batch_size):
-            dev_c = DeviceScheduler.put(
-                np.asarray(pad_rows(devs[start:stop], padded), np.int32),
-                device)
-            if parents is None:
-                acts = None
-            else:
-                chunk = parents[start:stop]
-                chunk = chunk + [chunk[-1]] * (padded - len(chunk))
-                acts = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk)
-            out = self.unit_fns[i](acts, dev_c)
+            g = np.asarray(pad_rows(genes[start:stop], padded), np.int32)
+            g_c = DeviceScheduler.put(g if unit_axis else g[:, 0], device)
+            acts = None if parents is None else \
+                self._stack_chunk(parents[start:stop], padded)
+            out = fn(acts, g_c)
             self.dispatches += 1
             if dev_idx is not None:
                 self.device_dispatches[dev_idx] = \
@@ -581,8 +935,10 @@ class PrefixEvalEngine:
             if final:
                 outs.append((out, n))
             else:
-                outs.extend(jax.tree.map(lambda a, j=j: a[j], out)
-                            for j in range(n))
+                if n < padded:      # drop padding rows: one slice per
+                                    # chunk, keeps view accounting exact
+                    out = jax.tree.map(lambda a: a[:n], out)
+                outs.append((_StackedBatch(out, n), n))
         return outs
 
 

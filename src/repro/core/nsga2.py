@@ -79,21 +79,47 @@ def fast_non_dominated_sort(F: np.ndarray,
 
 
 def crowding_distance(F: np.ndarray, ranks: np.ndarray) -> np.ndarray:
-    """Per-individual crowding distance within its front."""
+    """Per-individual crowding distance within its front.
+
+    Vectorised over fronts AND objectives: two stacked stable argsorts
+    order every objective column with rows grouped by front (the
+    front-segmented prefix trick — sorting by value first, then stably
+    by rank, equals a per-front stable value sort), after which spans,
+    boundary masks and neighbour differences are computed for all
+    fronts in one shot.  Bit-identical to the per-front reference
+    implementation: the same ``(f[i+1] - f[i-1]) / span`` operands
+    accumulate in the same per-objective order
+    (tests/test_nsga2.py::test_crowding_distance_matches_reference).
+    """
     n, m = F.shape
     dist = np.zeros(n)
-    for r in np.unique(ranks):
-        idx = np.where(ranks == r)[0]
-        if idx.size <= 2:
-            dist[idx] = np.inf
-            continue
-        for k in range(m):
-            order = idx[np.argsort(F[idx, k], kind="stable")]
-            f = F[order, k]
-            span = f[-1] - f[0]
-            dist[order[0]] = dist[order[-1]] = np.inf
-            if span > 0:
-                dist[order[1:-1]] += (f[2:] - f[:-2]) / span
+    if n == 0:
+        return dist
+    o1 = np.argsort(F, axis=0, kind="stable")           # value order [n, m]
+    o2 = np.argsort(ranks[o1], axis=0, kind="stable")   # group by front
+    order = np.take_along_axis(o1, o2, axis=0)          # [n, m]
+    fs = np.take_along_axis(F, order, axis=0)           # sorted values
+    rsorted = ranks[order[:, 0]]         # ascending; identical per column
+    first = np.empty(n, bool)
+    first[0] = True
+    first[1:] = rsorted[1:] != rsorted[:-1]
+    last = np.empty(n, bool)
+    last[-1] = True
+    last[:-1] = first[1:]
+    starts = np.flatnonzero(first)
+    sizes = np.diff(np.append(starts, n))
+    fid = np.cumsum(first) - 1                          # front id / position
+    span = fs[np.flatnonzero(last)][fid] - fs[starts][fid]      # [n, m]
+    small = (sizes <= 2)[fid]            # fronts of <= 2 members: all inf
+    contrib = np.zeros((n, m))
+    contrib[1:-1] = fs[2:] - fs[:-2]     # valid exactly on interior rows
+    interior = (~(first | last | small))[:, None] & (span > 0)
+    # objective-major accumulation preserves the reference's += order
+    # (each member receives its objective contributions k = 0..m-1)
+    np.add.at(dist, order.T[interior.T],
+              (contrib / np.where(span > 0, span, 1.0)).T[interior.T])
+    boundary = (first | last | small)
+    dist[order[boundary].ravel()] = np.inf
     return dist
 
 
@@ -103,11 +129,21 @@ def pareto_mask(F: np.ndarray) -> np.ndarray:
 
 
 def _tournament(rng, ranks, crowd, k, n_pick):
+    """k-way tournament on the exact (rank asc, crowding desc) order.
+
+    The historical scalarised key ``ranks * 1e9 - min(crowd, 1e8)`` was
+    only approximately lexicographic: it saturated crowding at 1e8
+    (every distance above the cap tied) and, worse, float64 has ~1e-7
+    absolute resolution at the 1e9 rank scale, so sub-1e-7 crowding
+    differences between same-rank candidates vanished entirely.  A
+    stable lexsort compares the two components exactly; ties still
+    resolve to the first-drawn candidate, matching argmin semantics
+    (tests/test_nsga2.py::test_tournament_exact_lexicographic).
+    """
     n = ranks.shape[0]
     cand = rng.integers(0, n, size=(n_pick, k))
-    # lexicographic: lower rank first, higher crowding second
-    key = ranks[cand] * 1e9 - np.minimum(crowd[cand], 1e8)
-    return cand[np.arange(n_pick), np.argmin(key, axis=1)]
+    order = np.lexsort((-crowd[cand], ranks[cand]), axis=-1)
+    return cand[np.arange(n_pick), order[..., 0]]
 
 
 def _crossover(rng, parents_a, parents_b, rate):

@@ -58,12 +58,29 @@ Per-generation cost then scales with unique prefixes, not
 prefixes, so most unit runs disappear.  ``eval_strategy="full"``
 selects the PR-1 whole-forward batched path; both are bit-identical
 (tests/test_staged_eval.py) and share one row-level result cache.
+
+Chain-fused staged dispatch
+---------------------------
+``fuse_chains=True`` (the default) additionally collapses every
+NON-BRANCHING run of the gene-prefix tree into one fused executable: a
+segment function composing the unit step fns ``start..start+length-1``
+inside a single ``jit(vmap)`` (:meth:`InferenceAccuracyEvaluator.
+_build_segment_fn` — heterogeneous layer shapes rule out ``lax.scan``,
+so composition happens at trace time and XLA fuses the bodies).  Per-
+device fault rates, weight tables and per-unit params are closed over
+or gathered exactly as the per-unit executables do, so fused results
+stay bitwise identical (tests/test_chain_fusion.py).  Segment
+executables are cached per ``(start, length)`` on the buddy-aligned
+power-of-two span ladder — at most ``~2·L`` entries, shared across
+generations and (via the module-level ``_SEGMENT_CACHE`` keyed on
+evaluator identity) across partitioner runs that reuse one evaluator.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import warnings
+import weakref
 from typing import Callable
 
 import jax
@@ -82,6 +99,15 @@ __all__ = [
     "ObjectiveFn", "profile_layer_sensitivity",
     "make_lm_accuracy_evaluator",
 ]
+
+
+# Module-level compiled-segment cache, keyed on evaluator identity (weak:
+# dropping the evaluator drops its executables).  Living here rather than
+# on the instance is deliberate: ObjectiveFn/partitioner rebuilds that
+# reuse one evaluator keep hitting the same compiled segments across
+# partitioner runs, and the fault-environment setter can invalidate the
+# whole entry in one pop.
+_SEGMENT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 class InferenceAccuracyEvaluator:
@@ -129,6 +155,13 @@ class InferenceAccuracyEvaluator:
         ``{"mem": n_enc_layers - 1}`` for enc-dec encoder memory.  The
         store then keeps one payload per keying prefix instead of one
         per (prefix × unit).
+      fuse_chains: staged-path chain fusion (default on).  Maximal
+        non-branching runs of the gene-prefix tree dispatch as single
+        fused segment executables (one ``jit(vmap)`` composing units
+        ``start..start+length-1`` on the buddy-aligned power-of-two
+        span ladder) instead of one dispatch per unit per depth —
+        bitwise identical, cost only (tests/test_chain_fusion.py).
+        ``False`` restores the PR-2 depth-by-depth walk.
     """
 
     def __init__(self, apply_fn, params, x: jax.Array, labels: jax.Array,
@@ -141,7 +174,8 @@ class InferenceAccuracyEvaluator:
                  n_units: int | None = None,
                  max_store_bytes: int | None = 256 << 20,
                  devices: int | str | None = "auto",
-                 shared_carry_fields: dict | None = None):
+                 shared_carry_fields: dict | None = None,
+                 fuse_chains: bool = True):
         self.spec = spec
         self.base_seed = base_seed
         self.labels = labels
@@ -156,6 +190,7 @@ class InferenceAccuracyEvaluator:
         self.max_store_bytes = max_store_bytes
         self._scheduler = DeviceScheduler(devices)
         self.shared_carry_fields = dict(shared_carry_fields or {})
+        self._fuse_chains = bool(fuse_chains)
         if n_units is None and isinstance(params, (list, tuple)):
             # per-unit param lists carry their own unit count; anything
             # else (e.g. a raw param dict) must pass n_units explicitly
@@ -222,7 +257,9 @@ class InferenceAccuracyEvaluator:
                 L, eval_batch_size=self._engine.eval_batch_size,
                 max_store_bytes=self.max_store_bytes,
                 scheduler=self._scheduler,
-                shared_fields=self.shared_carry_fields)
+                shared_fields=self.shared_carry_fields,
+                segment_fn=self._segment_dispatch if self._fuse_chains
+                else None)
             self._prefix_engine._cache = self._engine._cache
         return self._prefix_engine
 
@@ -232,6 +269,89 @@ class InferenceAccuracyEvaluator:
         if self._built_unit_fns is None:
             self._built_unit_fns = self._build_unit_fns()
         return self._built_unit_fns[i](acts, devs)
+
+    @property
+    def fuse_chains(self) -> bool:
+        """Whether the staged path fuses non-branching prefix chains
+        into single segment executables (see the constructor)."""
+        return self._fuse_chains
+
+    @fuse_chains.setter
+    def fuse_chains(self, value: bool):
+        self._fuse_chains = bool(value)
+        if self._prefix_engine is not None:
+            self._prefix_engine.segment_fn = \
+                self._segment_dispatch if self._fuse_chains else None
+
+    def _segment_dispatch(self, start: int, length: int) -> Callable:
+        """PrefixEvalEngine ``segment_fn``: the fused executable for
+        units ``start..start+length-1``, built once per (start, length)
+        and cached at module level (``_SEGMENT_CACHE``) so the
+        compiled segments survive ObjectiveFn/partitioner rebuilds."""
+        cache = _SEGMENT_CACHE.get(self)
+        if cache is None:
+            cache = _SEGMENT_CACHE[self] = {}
+        fn = cache.get((start, length))
+        if fn is None:
+            fn = cache[(start, length)] = \
+                self._build_segment_fn(start, length)
+        return fn
+
+    def _build_segment_fn(self, start: int, length: int) -> Callable:
+        """One jitted vmapped executable composing units
+        ``start..start+length-1`` — the chain-fusion tentpole.
+
+        Exactly the per-unit executables' math, composed at trace time
+        so XLA fuses the bodies into one dispatch: the same per-unit
+        seed derivation (``base_seed + 7919·i``), the same
+        weight-table gather (wr=None, pre-corrupted weights indexed by
+        the row's gene) or inline corruption at the per-device scalar
+        rates, depth 0 closing over the calibration batch, and the
+        final depth folding the Top-1 accuracy reduction at the
+        segment tail so logits never hit the activation store.
+        Length-1 segments reuse the per-unit executables (shared with
+        the unfused walk and the eviction-recompute fallback) instead
+        of compiling twins.
+
+        The returned callable must NOT capture ``self``: it is cached
+        in the weak-keyed ``_SEGMENT_CACHE``, and a value referencing
+        its key would make the entry (evaluator, params, calibration
+        batch and all compiled executables) immortal.
+        """
+        if length == 1:
+            if self._built_unit_fns is None:
+                self._built_unit_fns = self._build_unit_fns()
+            unit = self._built_unit_fns[start]
+            return lambda acts, genes, f=unit: f(acts, genes[:, 0])
+        step, x0, labels = self._step_fn, self._x, self.labels
+        L = self._n_units
+        a_dev = jnp.asarray(self.a_rates_by_device)
+        w_dev = jnp.asarray(self.w_rates_by_device)
+        tables = self.weight_tables
+        params = self._params
+        final = start + length == L
+        base = int(self.base_seed)
+
+        def seg(x, genes):
+            for k in range(length):
+                i = start + k
+                d = genes[k]
+                s_i = base + 7919 * i
+                if tables is not None:
+                    p = jax.tree.map(lambda t: t[d], tables[i])
+                    x = step(i, p, x, None, a_dev[d], s_i)
+                else:
+                    x = step(i, params[i], x, w_dev[d], a_dev[d], s_i)
+            if final:
+                pred = jnp.argmax(x, axis=-1)
+                return jnp.mean((pred == labels).astype(jnp.float32))
+            return x
+
+        if start == 0:
+            batched = jax.jit(jax.vmap(lambda g: seg(x0, g)))
+            return lambda acts, genes, b=batched: b(genes)
+        batched = jax.jit(jax.vmap(seg))
+        return lambda acts, genes, b=batched: b(acts, genes)
 
     def _build_unit_fns(self) -> list:
         """One jitted vmapped executable per unit depth.
@@ -353,9 +473,11 @@ class InferenceAccuracyEvaluator:
             self.weight_tables = None
             self._acc_batch_tables = None
             # staged state encodes the old rates too: drop the unit
-            # executables and the activation store (row cache is shared
-            # with _engine and already cleared above)
+            # executables, the fused-segment executables and the
+            # activation store (row cache is shared with _engine and
+            # already cleared above)
             self._built_unit_fns = None
+            _SEGMENT_CACHE.pop(self, None)
             if getattr(self, "_prefix_engine", None) is not None:
                 self._prefix_engine.store.clear()
 
@@ -505,6 +627,7 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
                                eval_strategy: str = "auto",
                                max_store_bytes: int | None = 256 << 20,
                                devices: int | str | None = "auto",
+                               fuse_chains: bool = True,
                                ) -> InferenceAccuracyEvaluator:
     """Staged-capable ΔAcc evaluator for any ``configs.ArchConfig`` LM.
 
@@ -556,7 +679,7 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
         eval_batch_size=eval_batch_size, step_fn=sm.step,
         eval_strategy=eval_strategy, n_units=sm.n_units,
         max_store_bytes=max_store_bytes, devices=devices,
-        shared_carry_fields=shared)
+        shared_carry_fields=shared, fuse_chains=fuse_chains)
 
 
 class SurrogateAccuracyEvaluator:
@@ -606,9 +729,11 @@ class ObjectiveFn:
     probe its compiled memory footprint and size the chunk itself.
     ``eval_strategy`` follows the same override-or-leave-alone rule:
     ``"staged"`` / ``"full"`` select the ΔAcc execution path on
-    evaluators that support it (see InferenceAccuracyEvaluator), and
-    ``devices`` (``"auto"`` or a count) selects how many local devices
-    the ΔAcc dispatches shard over — placement never changes results.
+    evaluators that support it (see InferenceAccuracyEvaluator),
+    ``fuse_chains`` (True/False) toggles the staged path's chain-fused
+    dispatch, and ``devices`` (``"auto"`` or a count) selects how many
+    local devices the ΔAcc dispatches shard over — placement and
+    fusion never change results.
     """
 
     cost_model: CostModel
@@ -618,6 +743,7 @@ class ObjectiveFn:
     eval_batch_size: int | str | None = None
     eval_strategy: str | None = None
     devices: int | str | None = None
+    fuse_chains: bool | None = None
 
     def __post_init__(self):
         # devices first (eval_batch_size="auto" budgets per device),
@@ -629,6 +755,9 @@ class ObjectiveFn:
         if (self.eval_strategy is not None
                 and hasattr(self.acc_evaluator, "eval_strategy")):
             self.acc_evaluator.eval_strategy = self.eval_strategy
+        if (self.fuse_chains is not None
+                and hasattr(self.acc_evaluator, "fuse_chains")):
+            self.acc_evaluator.fuse_chains = self.fuse_chains
         if (self.eval_batch_size is not None
                 and hasattr(self.acc_evaluator, "eval_batch_size")):
             self.acc_evaluator.eval_batch_size = self.eval_batch_size

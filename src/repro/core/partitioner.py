@@ -83,7 +83,8 @@ class _BasePartitioner:
                  batch: int = 1,
                  eval_batch_size: int | str | None = None,
                  eval_strategy: str | None = None,
-                 eval_devices: int | str | None = None):
+                 eval_devices: int | str | None = None,
+                 fuse_chains: bool | None = None):
         self.layers = layers
         self.devices = devices
         self.fault_spec = fault_spec
@@ -94,6 +95,7 @@ class _BasePartitioner:
         # eval_batch_size caps chromosomes per ΔAcc device dispatch
         # (memory knob, "auto" probes the compiled footprint),
         # eval_strategy selects staged prefix-reuse vs full forward,
+        # fuse_chains toggles the staged path's chain-fused dispatch,
         # and eval_devices shards ΔAcc dispatches over local devices
         # (named eval_* because `devices` here is the PARTITIONING
         # target ladder); none of them ever changes results — see
@@ -105,7 +107,8 @@ class _BasePartitioner:
             energy_weight=self.energy_weight,
             eval_batch_size=eval_batch_size,
             eval_strategy=eval_strategy,
-            devices=eval_devices)
+            devices=eval_devices,
+            fuse_chains=fuse_chains)
 
     uses_accuracy = False
 
@@ -181,7 +184,8 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
                    batch: int = 1,
                    eval_batch_size: int | str | None = None,
                    eval_strategy: str | None = None,
-                   eval_devices: int | str | None = None) -> AFarePart:
+                   eval_devices: int | str | None = None,
+                   fuse_chains: bool | None = None) -> AFarePart:
     """:class:`AFarePart` over an LM config's layer graph — one call,
     no CNN/LM split.
 
@@ -207,4 +211,5 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
     return AFarePart(layers, devices, fault_spec=fault_spec,
                      acc_evaluator=acc_evaluator, nsga2_config=nsga2_config,
                      batch=batch, eval_batch_size=eval_batch_size,
-                     eval_strategy=eval_strategy, eval_devices=eval_devices)
+                     eval_strategy=eval_strategy, eval_devices=eval_devices,
+                     fuse_chains=fuse_chains)

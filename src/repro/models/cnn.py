@@ -169,18 +169,39 @@ class _StepModel:
     ``step(i, params_i, x, wr, ar, seed)`` takes unit *i*'s params, its
     input activation, scalar fault rates (either may be None to skip
     that corruption — e.g. pre-corrupted weight tables pass wr=None)
-    and the unit's already-offset fault seed.  ``apply`` is the ordered
-    composition of the L steps, so both execution modes share one
-    definition of the math.
+    and the unit's already-offset fault seed.  ``segment`` is the
+    ordered composition of any consecutive unit run — the contract the
+    chain-fused staged evaluator compiles as ONE executable
+    (``core.objectives._build_segment_fn``) — and ``apply`` is the
+    whole-model segment, so every execution mode shares one definition
+    of the math.
     """
 
     n_units: int = 0
 
     @classmethod
-    def apply(cls, params, x, w_rates=None, a_rates=None, seed=0):
-        for i in range(cls.n_units):
-            x = cls.step(i, params[i], x, *_rates(w_rates, a_rates, seed, i))
+    def segment(cls, start, params, x, w_rates=None, a_rates=None, seed=0):
+        """Compose units ``start..start+len(params)-1``.
+
+        ``params`` is the per-unit param list slice; the rate vectors
+        index LOCAL positions (``w_rates[k]`` is unit ``start+k``'s
+        scalar rate) while fault seeds derive from the ABSOLUTE unit
+        index (``seed + 7919·(start+k)``, the `_rates` derivation), so
+        splitting a run into segments composes to exactly ``apply``.
+        """
+        for k in range(len(params)):
+            if w_rates is None and a_rates is None:
+                x = cls.step(start + k, params[k], x)
+            else:
+                x = cls.step(start + k, params[k], x,
+                             None if w_rates is None else w_rates[k],
+                             None if a_rates is None else a_rates[k],
+                             seed + 7919 * (start + k))
         return x
+
+    @classmethod
+    def apply(cls, params, x, w_rates=None, a_rates=None, seed=0):
+        return cls.segment(0, params, x, w_rates, a_rates, seed)
 
 
 # ==========================================================================

@@ -602,15 +602,30 @@ class LMStepModel:
         return {"x": h, "mem": mem}
 
     # -- whole-model forward derived from the steps -------------------------
+    def segment(self, start: int, params: list[Params], x, w_rates=None,
+                a_rates=None, seed=0):
+        """Compose units ``start..start+len(params)-1`` — the
+        ``models.cnn._StepModel.segment`` twin (local rate indices,
+        absolute-unit fault seeds ``seed + 7919·(start+k)``), the
+        contract the chain-fused staged evaluator compiles as one
+        executable.  Any segment split composes to exactly
+        :meth:`apply`."""
+        for k in range(len(params)):
+            if w_rates is None and a_rates is None:
+                x = self.step(start + k, params[k], x)
+            else:
+                x = self.step(start + k, params[k], x,
+                              None if w_rates is None else w_rates[k],
+                              None if a_rates is None else a_rates[k],
+                              seed + 7919 * (start + k))
+        return x
+
     def apply(self, params: list[Params], x, w_rates=None, a_rates=None,
               seed=0):
         """Ordered composition of the units — per-UNIT traced fault
         rate vectors, the same ``apply_fn`` contract the CNN models
         fulfil for ``InferenceAccuracyEvaluator``."""
-        for i in range(self.n_units):
-            x = self.step(i, params[i], x,
-                          *_unit_rates(w_rates, a_rates, seed, i))
-        return x
+        return self.segment(0, params, x, w_rates, a_rates, seed)
 
 
 # ==========================================================================

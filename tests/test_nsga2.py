@@ -108,6 +108,108 @@ def test_nsga2_seeded_population_is_used():
     assert any((p == 1).all() for p in res.pareto_pop)
 
 
+def _reference_crowding_distance(F, ranks):
+    """The pre-vectorisation per-front implementation, kept verbatim as
+    the differential oracle for the batched-argsort version."""
+    n, m = F.shape
+    dist = np.zeros(n)
+    for r in np.unique(ranks):
+        idx = np.where(ranks == r)[0]
+        if idx.size <= 2:
+            dist[idx] = np.inf
+            continue
+        for k in range(m):
+            order = idx[np.argsort(F[idx, k], kind="stable")]
+            f = F[order, k]
+            span = f[-1] - f[0]
+            dist[order[0]] = dist[order[-1]] = np.inf
+            if span > 0:
+                dist[order[1:-1]] += (f[2:] - f[:-2]) / span
+    return dist
+
+
+@given(st.integers(0, 10_000), st.integers(1, 40), st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_crowding_distance_matches_reference(seed, n, m):
+    """The batched-argsort crowding distance is BIT-identical to the
+    per-front loop — duplicate objective values (stable-sort ties),
+    zero spans, singleton/pair fronts and interleaved front ids all
+    included."""
+    rng = np.random.default_rng(seed)
+    # quantised values force duplicates; shuffled ranks force
+    # non-contiguous fronts
+    F = np.round(rng.random((n, m)) * 8) / 8
+    ranks = rng.integers(0, max(1, n // 3) + 1, size=n)
+    got = crowding_distance(F, ranks)
+    want = _reference_crowding_distance(F, ranks)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_crowding_distance_matches_reference_degenerate():
+    # constant objective column (span 0) + one front of exactly 3
+    F = np.array([[1.0, 0.0], [1.0, 0.5], [1.0, 1.0], [2.0, 2.0]])
+    ranks = np.array([0, 0, 0, 1])
+    np.testing.assert_array_equal(
+        crowding_distance(F, ranks), _reference_crowding_distance(F, ranks))
+
+
+class _FixedRng:
+    """Stub rng delivering a fixed candidate matrix to _tournament."""
+
+    def __init__(self, cand):
+        self.cand = np.asarray(cand)
+
+    def integers(self, lo, hi, size=None):
+        assert size == self.cand.shape
+        return self.cand
+
+
+def test_tournament_exact_lexicographic():
+    from repro.core.nsga2 import _tournament
+
+    # saturation regression: the old key clamped crowding at 1e8, so
+    # 1e8 vs 2e8 tied and the first candidate won wrongly
+    ranks = np.array([0, 0])
+    crowd = np.array([1e8, 2e8])
+    pick = _tournament(_FixedRng([[0, 1]]), ranks, crowd, 2, 1)
+    assert pick[0] == 1
+
+    # precision regression: at rank scale 5e9 the old float64 key lost
+    # crowding differences below ~1e-6 entirely
+    ranks = np.array([5, 5])
+    crowd = np.array([7.0, 7.0 + 1e-9])
+    pick = _tournament(_FixedRng([[0, 1]]), ranks, crowd, 2, 1)
+    assert pick[0] == 1
+
+    # rank always beats crowding, including infinite crowding
+    ranks = np.array([1, 0])
+    crowd = np.array([np.inf, 0.0])
+    pick = _tournament(_FixedRng([[0, 1]]), ranks, crowd, 2, 1)
+    assert pick[0] == 1
+
+    # exact ties resolve to the first-drawn candidate (argmin semantics)
+    ranks = np.array([2, 2, 2])
+    crowd = np.array([3.0, 3.0, 4.0])
+    pick = _tournament(_FixedRng([[1, 0], [0, 1]]), ranks, crowd, 2, 2)
+    assert pick.tolist() == [1, 0]
+
+
+@given(st.integers(0, 10_000), st.integers(2, 30), st.integers(2, 4))
+@settings(max_examples=25, deadline=None)
+def test_tournament_winner_is_undominated_in_draw(seed, n, k):
+    """The winner's (rank, -crowd) key is minimal among its draw."""
+    from repro.core.nsga2 import _tournament
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(0, 4, size=n)
+    crowd = np.where(rng.random(n) < 0.2, np.inf, rng.random(n) * 1e9)
+    cand = rng.integers(0, n, size=(5, k))
+    picks = _tournament(_FixedRng(cand), ranks, crowd, k, 5)
+    for row, win in zip(cand, picks):
+        assert any(win == c for c in row)
+        for c in row:
+            assert (ranks[win], -crowd[win]) <= (ranks[c], -crowd[c])
+
+
 def test_nsga2_deterministic():
     def eval_fn(P):
         return np.stack([P.sum(1).astype(float),
