@@ -16,7 +16,8 @@ from repro.core.eval_engine import (ActivationStore, PopulationEvalEngine,
                                     PrefixEvalEngine, auto_eval_batch_size,
                                     device_memory_budget)
 from repro.core.fault import FaultSpec, FaultContext, PAPER_FAULT_SPEC
-from repro.core.nsga2 import NSGA2Config, nsga2, fast_non_dominated_sort
+from repro.core.nsga2 import (NSGA2Config, nsga2, nsga2_steps,
+                              fast_non_dominated_sort)
 from repro.core.objectives import (InferenceAccuracyEvaluator,
                                    SurrogateAccuracyEvaluator, ObjectiveFn,
                                    make_lm_accuracy_evaluator,
@@ -25,14 +26,15 @@ from repro.core.partitioner import (AFarePart, CNNPartedLike,
                                     FaultUnawareBaseline, PartitionPlan,
                                     contiguous_stages, lm_partitioner)
 from repro.core.runtime import (FaultEnvironment, OnlineReconfigurator,
-                                ReconfigEvent, simulate_deployment)
+                                ReconfigEvent, ReoptJob,
+                                simulate_deployment)
 
 __all__ = [
     "CostModel", "DeviceProfile", "LayerInfo", "EYERISS", "SIMBA",
     "TPU_V5E", "TPU_V5E_LOWVOLT", "TPU_V5E_MID", "TPU_V5E_ECC",
     "PAPER_DEVICES", "POD_TIERS", "POD_TIERS_4",
     "FaultSpec", "FaultContext", "PAPER_FAULT_SPEC",
-    "NSGA2Config", "nsga2", "fast_non_dominated_sort",
+    "NSGA2Config", "nsga2", "nsga2_steps", "fast_non_dominated_sort",
     "PopulationEvalEngine", "PrefixEvalEngine", "ActivationStore",
     "auto_eval_batch_size", "device_memory_budget",
     "InferenceAccuracyEvaluator", "SurrogateAccuracyEvaluator",
@@ -41,5 +43,5 @@ __all__ = [
     "AFarePart", "CNNPartedLike", "FaultUnawareBaseline", "PartitionPlan",
     "contiguous_stages", "lm_partitioner",
     "FaultEnvironment", "OnlineReconfigurator", "ReconfigEvent",
-    "simulate_deployment",
+    "ReoptJob", "simulate_deployment",
 ]

@@ -17,8 +17,8 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["NSGA2Config", "NSGA2Result", "nsga2", "fast_non_dominated_sort",
-           "crowding_distance", "pareto_mask"]
+__all__ = ["NSGA2Config", "NSGA2Result", "nsga2", "nsga2_steps",
+           "fast_non_dominated_sort", "crowding_distance", "pareto_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,30 +162,20 @@ def _mutate(rng, pop, n_devices, rate):
     return np.where(mask, rand, pop)
 
 
-def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
-          n_genes: int, n_devices: int, config: NSGA2Config = NSGA2Config(),
-          violation_fn: Callable[[np.ndarray], np.ndarray] | None = None,
-          initial_pop: np.ndarray | None = None,
-          callback: Callable[[int, np.ndarray, np.ndarray], None] | None = None,
-          ) -> NSGA2Result:
-    """Minimise the vector objective eval_fn over integer chromosomes.
+def nsga2_steps(eval_fn: Callable[[np.ndarray], np.ndarray],
+                n_genes: int, n_devices: int,
+                config: NSGA2Config = NSGA2Config(),
+                violation_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                initial_pop: np.ndarray | None = None):
+    """Generator form of :func:`nsga2` — yields ``(gen, pop, objs)`` after
+    each generation; the :class:`NSGA2Result` is the generator's *return*
+    value (``StopIteration.value``).
 
-    Args:
-      eval_fn: [N, L] int chromosomes -> [N, M] objective matrix (minimise).
-        **Contract:** eval_fn receives the whole population in ONE call
-        per generation and must return the full [N, M] matrix from that
-        call — nsga2 never loops over individuals, so a batched
-        evaluator (e.g. ``ObjectiveFn`` backed by a ``jit(vmap)``
-        ΔAcc engine) keeps device dispatch count O(generations), not
-        O(generations × population).  Memory capping belongs inside
-        eval_fn (``ObjectiveFn.eval_batch_size`` chunks the unique
-        chromosomes per dispatch without changing results).
-      n_genes: chromosome length L (number of layers).
-      n_devices: alphabet size D (number of devices/tiers).
-      violation_fn: optional [N, L] -> [N] constraint violation (<=0 feasible).
-      initial_pop: optional seed population (e.g. the previous deployment
-        for the online re-optimization phase).
-      callback: called each generation with (gen, pop, objs).
+    This is the substrate of the serving engine's off-critical-path
+    re-optimization: ``core.runtime.ReoptJob`` advances one generation
+    per decode step, interleaved with the in-flight decode dispatch.
+    :func:`nsga2` drains this generator to completion, so the two entry
+    points share one code path and are bit-identical for a given config.
     """
     rng = np.random.default_rng(config.seed)
     N = config.population
@@ -235,8 +225,7 @@ def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
         pop, objs = allpop[keep], allobjs[keep]
         viol = allviol[keep] if allviol is not None else None
         history.append(objs.min(axis=0))
-        if callback is not None:
-            callback(g, pop, objs)
+        yield g, pop, objs
 
     ranks = fast_non_dominated_sort(objs, viol)
     front = ranks == 0
@@ -245,3 +234,39 @@ def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
     fobjs = objs[front][fidx]
     return NSGA2Result(pareto_pop=fpop, pareto_objs=fobjs,
                        history=history, evaluations=evaluations)
+
+
+def nsga2(eval_fn: Callable[[np.ndarray], np.ndarray],
+          n_genes: int, n_devices: int, config: NSGA2Config = NSGA2Config(),
+          violation_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+          initial_pop: np.ndarray | None = None,
+          callback: Callable[[int, np.ndarray, np.ndarray], None] | None = None,
+          ) -> NSGA2Result:
+    """Minimise the vector objective eval_fn over integer chromosomes.
+
+    Args:
+      eval_fn: [N, L] int chromosomes -> [N, M] objective matrix (minimise).
+        **Contract:** eval_fn receives the whole population in ONE call
+        per generation and must return the full [N, M] matrix from that
+        call — nsga2 never loops over individuals, so a batched
+        evaluator (e.g. ``ObjectiveFn`` backed by a ``jit(vmap)``
+        ΔAcc engine) keeps device dispatch count O(generations), not
+        O(generations × population).  Memory capping belongs inside
+        eval_fn (``ObjectiveFn.eval_batch_size`` chunks the unique
+        chromosomes per dispatch without changing results).
+      n_genes: chromosome length L (number of layers).
+      n_devices: alphabet size D (number of devices/tiers).
+      violation_fn: optional [N, L] -> [N] constraint violation (<=0 feasible).
+      initial_pop: optional seed population (e.g. the previous deployment
+        for the online re-optimization phase).
+      callback: called each generation with (gen, pop, objs).
+    """
+    gen = nsga2_steps(eval_fn, n_genes, n_devices, config=config,
+                      violation_fn=violation_fn, initial_pop=initial_pop)
+    while True:
+        try:
+            g, pop, objs = next(gen)
+        except StopIteration as stop:
+            return stop.value
+        if callback is not None:
+            callback(g, pop, objs)

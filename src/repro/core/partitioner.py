@@ -23,7 +23,7 @@ import numpy as np
 from repro.core.costmodel import (CostModel, DeviceProfile, LayerInfo,
                                   POD_TIERS_4)
 from repro.core.fault import FaultSpec
-from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
+from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2, nsga2_steps
 from repro.core.objectives import ObjectiveFn, SurrogateAccuracyEvaluator
 
 __all__ = ["PartitionPlan", "AFarePart", "FaultUnawareBaseline",
@@ -113,12 +113,30 @@ class _BasePartitioner:
     uses_accuracy = False
 
     def optimize(self, initial_pop: np.ndarray | None = None,
-                 callback=None) -> PartitionPlan:
+                 callback=None, config: NSGA2Config | None = None,
+                 ) -> PartitionPlan:
         res: NSGA2Result = nsga2(
             self.objective, n_genes=len(self.layers),
-            n_devices=len(self.devices), config=self.config,
+            n_devices=len(self.devices), config=config or self.config,
             violation_fn=self.objective.violation,
             initial_pop=initial_pop, callback=callback)
+        return self._plan_from_result(res)
+
+    def optimize_steps(self, initial_pop: np.ndarray | None = None,
+                       config: NSGA2Config | None = None):
+        """Generator form of :meth:`optimize`: yields ``(gen, pop, objs)``
+        per NSGA-II generation and *returns* the :class:`PartitionPlan`
+        (``StopIteration.value``).  Lets the serving engine advance the
+        online re-optimization one generation at a time, off the decode
+        hot path (see ``core.runtime.ReoptJob``).  Draining it yields the
+        same plan as :meth:`optimize` with the same arguments."""
+        res: NSGA2Result = yield from nsga2_steps(
+            self.objective, n_genes=len(self.layers),
+            n_devices=len(self.devices), config=config or self.config,
+            violation_fn=self.objective.violation, initial_pop=initial_pop)
+        return self._plan_from_result(res)
+
+    def _plan_from_result(self, res: NSGA2Result) -> PartitionPlan:
         idx = self.select(res.pareto_objs)
         objs = res.pareto_objs[idx]
         dacc = float(objs[2]) if objs.shape[0] > 2 else float("nan")

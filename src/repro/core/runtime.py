@@ -3,9 +3,27 @@ accuracy-aware repartitioning.
 
 Deploy the most robust Pareto partition P*; monitor the observed
 accuracy drop; when ΔAcc(P*) > θ, re-invoke NSGA-II with *current*
-runtime statistics (``RunNSGAIIWithCurrentStats``) — i.e. the device
-fault scales estimated from telemetry, and the current population
-seeded with the deployed partition — then hot-swap to the new P'.
+runtime statistics (``RunNSGAIIWithCurrentStats``) — the device fault
+scales estimated from telemetry, and the current population seeded with
+the deployed partition — then hot-swap to the new P'.
+
+Two consumers drive this loop:
+
+* :func:`simulate_deployment` — the simulation harness.  It reads the
+  *oracle* environment (:meth:`FaultEnvironment.scales_at`) directly and
+  runs each re-optimization synchronously via
+  :meth:`OnlineReconfigurator.step`.
+* ``serve.Engine`` — the continuous-batching serving engine.  It feeds
+  the loop *estimated* scales from ``serve.monitor.FaultMonitor``
+  (EWMA over per-device error counters) and runs the re-optimization
+  incrementally off the decode hot path: a :class:`ReoptJob` from
+  :meth:`OnlineReconfigurator.start_reconfigure` advances one NSGA-II
+  generation per decode step while the decode dispatch is in flight,
+  and commits the swap when the budget is spent.  Both paths share the
+  same code (``step`` drains a ``ReoptJob`` synchronously), so
+  telemetry-fed serving and oracle-fed simulation make identical
+  decisions when the estimates match the oracle
+  (tests/test_serve.py::test_telemetry_matches_oracle).
 
 The environment simulator models what the paper's FPGA deployment
 would observe: per-device fault-rate multipliers that drift/step over
@@ -21,8 +39,8 @@ import numpy as np
 from repro.core.nsga2 import NSGA2Config
 from repro.core.partitioner import PartitionPlan, _BasePartitioner
 
-__all__ = ["ReconfigEvent", "OnlineReconfigurator", "FaultEnvironment",
-           "simulate_deployment"]
+__all__ = ["ReconfigEvent", "ReoptJob", "OnlineReconfigurator",
+           "FaultEnvironment", "simulate_deployment"]
 
 
 @dataclasses.dataclass
@@ -39,18 +57,84 @@ class FaultEnvironment:
     """Time-varying per-device fault-rate multipliers.
 
     ``schedule`` maps step -> array[D] of multipliers; steps between
-    entries hold the previous value (step function).
+    entries hold the previous value (step function).  The sorted step
+    keys are precomputed once (and refreshed if the schedule's size
+    changes) so :meth:`scales_at` is a binary search, not a re-sort.
     """
 
     base_scale: np.ndarray
     schedule: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self):
+        self._compile()
+
+    def _compile(self):
+        steps = sorted(self.schedule)
+        self._steps = np.asarray(steps, dtype=np.int64)
+        self._rows = [np.asarray(self.base_scale, dtype=float)] + [
+            np.asarray(self.schedule[s], dtype=float) for s in steps]
+
     def scales_at(self, step: int) -> np.ndarray:
-        scales = self.base_scale.copy()
-        for s in sorted(self.schedule):
-            if s <= step:
-                scales = np.asarray(self.schedule[s], dtype=float)
-        return scales
+        if len(self._steps) != len(self.schedule):   # mutated after init
+            self._compile()
+        i = int(np.searchsorted(self._steps, step, side="right"))
+        return self._rows[i].copy()
+
+
+class ReoptJob:
+    """One in-flight online re-optimization, advanced a generation at a
+    time.
+
+    Created by :meth:`OnlineReconfigurator.start_reconfigure`.  The
+    serving engine calls :meth:`advance` between decode dispatch and
+    result sync each step; when the generation budget is spent the job
+    commits: the reconfigurator's plan swaps and a
+    :class:`ReconfigEvent` is appended.  The NSGA-II state lives in a
+    generator (``nsga2_steps``), so a drained job is bit-identical to
+    the synchronous :meth:`OnlineReconfigurator.step` path.
+
+    The job snapshots the device scales at trigger time; if the
+    environment shifts again mid-job the next canary re-triggers on the
+    committed plan (the serving engine may also abandon a stale job on a
+    CRITICAL transition — see ``serve.Engine``).
+    """
+
+    def __init__(self, reconfigurator: "OnlineReconfigurator", step_idx: int,
+                 observed: float, device_scales: np.ndarray, gen):
+        self.reconfigurator = reconfigurator
+        self.step_idx = step_idx
+        self.observed = observed
+        self.device_scales = np.asarray(device_scales)
+        self.old_partition = reconfigurator.plan.partition.copy()
+        self.generations_run = 0
+        self.done = False
+        self.plan: PartitionPlan | None = None
+        self._gen = gen
+
+    def advance(self, generations: int = 1) -> bool:
+        """Run up to ``generations`` more NSGA-II generations.  Returns
+        True once the job has finished and committed the new plan."""
+        if self.done:
+            return True
+        for _ in range(generations):
+            try:
+                next(self._gen)
+                self.generations_run += 1
+            except StopIteration as stop:
+                self.plan = stop.value
+                self._commit()
+                return True
+        return False
+
+    def _commit(self):
+        rec = self.reconfigurator
+        rec.events.append(ReconfigEvent(
+            step=self.step_idx, observed_delta_acc=self.observed,
+            old_partition=self.old_partition,
+            new_partition=self.plan.partition.copy(),
+            new_predicted_delta_acc=self.plan.delta_acc))
+        rec.plan = self.plan
+        self.done = True
 
 
 class OnlineReconfigurator:
@@ -83,17 +167,22 @@ class OnlineReconfigurator:
         return self.plan.partition
 
     def step(self, step_idx: int, device_scales: np.ndarray) -> float:
-        """One monitoring tick.  Returns the observed ΔAcc."""
+        """One synchronous monitoring tick.  Returns the observed ΔAcc."""
         observed = float(self.observe_fn(self.plan.partition, device_scales))
         if observed > self.theta:
-            self._reconfigure(step_idx, observed, device_scales)
+            job = self.start_reconfigure(step_idx, observed, device_scales)
+            while not job.advance():
+                pass
         return observed
 
-    def _reconfigure(self, step_idx: int, observed: float,
-                     device_scales: np.ndarray):
-        """RunNSGAIIWithCurrentStats(): refresh the evaluator's view of the
-        environment, re-run a short NSGA-II seeded with the current
-        deployment + previous front, and swap to the new most-robust P'."""
+    def start_reconfigure(self, step_idx: int, observed: float,
+                          device_scales: np.ndarray) -> ReoptJob:
+        """RunNSGAIIWithCurrentStats(), incrementally: refresh the
+        evaluator's view of the environment, then return a
+        :class:`ReoptJob` whose :meth:`ReoptJob.advance` runs the short
+        re-optimization one NSGA-II generation at a time (seeded with
+        the current deployment + previous front) and hot-swaps to the
+        new most-robust P' on completion."""
         old = self.plan.partition.copy()
         # Current runtime stats: update the fault scales the evaluator uses.
         ev = self.partitioner.objective.acc_evaluator
@@ -109,24 +198,17 @@ class OnlineReconfigurator:
             self.partitioner.cost_model.fault_scale = np.asarray(device_scales)
 
         cfg = self.partitioner.config
-        self.partitioner.config = NSGA2Config(
+        reopt_cfg = NSGA2Config(
             population=cfg.population,
             generations=self.reopt_generations,
             crossover_rate=cfg.crossover_rate,
             mutation_rate=cfg.mutation_rate,
             tournament_k=cfg.tournament_k,
             seed=cfg.seed + step_idx + 1)
-        try:
-            seed_pop = np.concatenate(
-                [old[None, :], self.plan.front], axis=0)
-            new_plan = self.partitioner.optimize(initial_pop=seed_pop)
-        finally:
-            self.partitioner.config = cfg
-        self.events.append(ReconfigEvent(
-            step=step_idx, observed_delta_acc=observed,
-            old_partition=old, new_partition=new_plan.partition.copy(),
-            new_predicted_delta_acc=new_plan.delta_acc))
-        self.plan = new_plan
+        seed_pop = np.concatenate([old[None, :], self.plan.front], axis=0)
+        gen = self.partitioner.optimize_steps(initial_pop=seed_pop,
+                                              config=reopt_cfg)
+        return ReoptJob(self, step_idx, observed, device_scales, gen)
 
 
 def simulate_deployment(reconfigurator: OnlineReconfigurator,

@@ -32,6 +32,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -41,7 +42,7 @@ from repro.models.transformer import (_block_fwd, _encode, embed_tokens,
 from repro.train.train_step import cross_entropy_loss
 
 __all__ = ["stage_stack", "stage_param_specs", "make_pp_loss",
-           "group_cuts"]
+           "group_cuts", "swap_migration"]
 
 
 def group_cuts(layer_cuts: list[int], cfg: ArchConfig) -> list[int]:
@@ -54,6 +55,36 @@ def group_cuts(layer_cuts: list[int], cfg: ArchConfig) -> list[int]:
         cuts.append(g)
     cuts.append(G)
     return cuts
+
+
+def swap_migration(old_partition, new_partition, cfg: ArchConfig,
+                   n_stages: int) -> dict:
+    """What a hot swap costs the pipeline deployment: which parameter
+    groups change pipeline stage under the new layer->tier mapping.
+
+    The serving engine's swap itself is free (fault rates are jit
+    arguments), but on the GSPMD pipeline the stage split is induced by
+    the partition (``contiguous_stages`` -> ``group_cuts``), so a swap
+    that moves a cut migrates that group's parameters between stages.
+    Returns ``{"migrated_groups", "n_groups", "old_cuts", "new_cuts"}``;
+    the engine records ``migrated_groups`` per swap event so the
+    operator can see the data-movement bill alongside the ΔAcc win.
+    """
+    from repro.core.partitioner import contiguous_stages
+    old_cuts = group_cuts(contiguous_stages(
+        np.asarray(old_partition), n_stages), cfg)
+    new_cuts = group_cuts(contiguous_stages(
+        np.asarray(new_partition), n_stages), cfg)
+
+    def stage_of(cuts):
+        s = np.zeros(cuts[-1], dtype=np.int64)
+        for i in range(len(cuts) - 1):
+            s[cuts[i]:cuts[i + 1]] = i
+        return s
+
+    migrated = int((stage_of(old_cuts) != stage_of(new_cuts)).sum())
+    return {"migrated_groups": migrated, "n_groups": old_cuts[-1],
+            "old_cuts": old_cuts, "new_cuts": new_cuts}
 
 
 def stage_stack(group_params, cuts: list[int]):

@@ -1,4 +1,7 @@
 from repro.serve.engine import Engine, Request, ServeConfig
-from repro.serve.kvcache import cache_bytes, cache_specs
+from repro.serve.kvcache import cache_bytes, cache_specs, merge_slot, slot_bytes
+from repro.serve.monitor import FaultMonitor, HealthState, MonitorConfig
 
-__all__ = ["Engine", "Request", "ServeConfig", "cache_bytes", "cache_specs"]
+__all__ = ["Engine", "Request", "ServeConfig", "cache_bytes", "cache_specs",
+           "merge_slot", "slot_bytes",
+           "FaultMonitor", "HealthState", "MonitorConfig"]

@@ -2,7 +2,14 @@
 
 Cache layout comes from ``models.transformer.init_cache``; this module
 adds spec construction (ShapeDtypeStruct caches for lowering without
-allocation) and sequence-shard arithmetic for flash-decode.
+allocation), sequence-shard arithmetic for flash-decode, and the slot
+operations continuous batching needs: every cache leaf carries the
+batch as its second axis (``[G, B, ...]``), so admitting a request is a
+per-leaf row write and the rest of the batch — and therefore every
+other in-flight request — is untouched.  The same property is what
+makes a partition hot-swap free: fault rates are *arguments* to the
+jitted decode step, not baked into the cache, so swapping the
+layer->tier map changes no cache bytes at all.
 """
 from __future__ import annotations
 
@@ -12,7 +19,22 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models.transformer import _cache_len  # shared layout rule
 
-__all__ = ["cache_specs", "cache_bytes"]
+__all__ = ["cache_specs", "cache_bytes", "merge_slot", "slot_bytes"]
+
+
+def merge_slot(cache, slot_cache, i):
+    """Write a single-request cache (batch dim 1, same max_len layout)
+    into slot ``i`` of a batched cache.  Pure; safe under jit with a
+    traced ``i``.  All other slots' rows are bit-unchanged, which is the
+    no-global-barrier admission property the serving engine relies on
+    (tests/test_serve.py::test_mixed_length_admission)."""
+    return jax.tree.map(lambda full, one: full.at[:, i].set(one[:, 0]),
+                        cache, slot_cache)
+
+
+def slot_bytes(cfg: ArchConfig, max_len: int) -> int:
+    """Cache bytes one admission slot occupies (batch share of a row)."""
+    return cache_bytes(cfg, batch=1, max_len=max_len)
 
 
 def cache_specs(cfg: ArchConfig, batch: int, max_len: int,

@@ -217,3 +217,30 @@ def test_nsga2_deterministic():
     r1 = nsga2(eval_fn, 6, 2, NSGA2Config(population=16, generations=5, seed=9))
     r2 = nsga2(eval_fn, 6, 2, NSGA2Config(population=16, generations=5, seed=9))
     np.testing.assert_array_equal(r1.pareto_pop, r2.pareto_pop)
+
+
+def test_nsga2_steps_drains_to_same_result():
+    """The generator form (serving's time-sliced re-opt substrate) is
+    bit-identical to nsga2() when drained, and yields per generation."""
+    from repro.core.nsga2 import nsga2_steps
+
+    def eval_fn(P):
+        return np.stack([P.sum(1).astype(float),
+                         (P == 0).sum(1).astype(float)], 1)
+
+    cfg = NSGA2Config(population=16, generations=5, seed=9)
+    ref = nsga2(eval_fn, 6, 2, cfg)
+    gen = nsga2_steps(eval_fn, 6, 2, cfg)
+    yields = 0
+    while True:
+        try:
+            g, pop, objs = next(gen)
+            assert g == yields
+            yields += 1
+        except StopIteration as stop:
+            res = stop.value
+            break
+    assert yields == cfg.generations
+    np.testing.assert_array_equal(ref.pareto_pop, res.pareto_pop)
+    np.testing.assert_array_equal(ref.pareto_objs, res.pareto_objs)
+    assert ref.evaluations == res.evaluations

@@ -61,6 +61,60 @@ def test_reconfig_triggers_on_environment_shift(setup):
     assert (rec.partition == 1).sum() <= (ev0.old_partition == 1).sum()
 
 
+def test_scales_at_precomputed_keys():
+    """scales_at binary-searches precomputed sorted keys (it used to
+    re-sort the schedule per call) and still honours late mutation."""
+    env = FaultEnvironment(
+        base_scale=np.array([1.0, 0.1]),
+        schedule={8: np.array([1.0, 40.0]), 3: np.array([2.0, 0.1])})
+    assert np.array_equal(env.scales_at(0), [1.0, 0.1])
+    assert np.array_equal(env.scales_at(2), [1.0, 0.1])
+    assert np.array_equal(env.scales_at(3), [2.0, 0.1])
+    assert np.array_equal(env.scales_at(7), [2.0, 0.1])
+    assert np.array_equal(env.scales_at(8), [1.0, 40.0])
+    assert np.array_equal(env.scales_at(999), [1.0, 40.0])
+    env.schedule[50] = np.array([9.0, 9.0])
+    assert np.array_equal(env.scales_at(60), [9.0, 9.0])
+
+
+def test_reopt_job_matches_sync_step(setup):
+    """Advancing a ReoptJob one generation at a time (the serving
+    engine's off-critical-path mode) must land on the same partition and
+    event as the synchronous rec.step() path."""
+    layers, cm, ev, part, plan = setup
+    obs = _observe_fn(cm)
+    base = np.array([1.0, 0.35])
+    shifted = np.array([1.0, 25.0])
+    theta = obs(plan.partition, base) * 1.5 + 1e-9
+
+    rec_sync = OnlineReconfigurator(part, plan, theta=theta, observe_fn=obs,
+                                    reopt_generations=5)
+    rec_sync.step(3, shifted)
+    assert len(rec_sync.events) == 1
+
+    # fresh partitioner state (observe/reopt mutate the evaluator's scales)
+    layers2 = ResNet18.layer_infos(num_classes=16, width=0.5, img=32)
+    cm2 = CostModel(layers2, PAPER_DEVICES)
+    ev2 = SurrogateAccuracyEvaluator(cm2)
+    part2 = AFarePart(layers2, PAPER_DEVICES, acc_evaluator=ev2,
+                      nsga2_config=NSGA2Config(population=20, generations=10,
+                                               seed=0))
+    plan2 = part2.optimize()
+    obs2 = _observe_fn(cm2)
+    rec_inc = OnlineReconfigurator(part2, plan2, theta=theta,
+                                   observe_fn=obs2, reopt_generations=5)
+    observed = obs2(plan2.partition, shifted)
+    job = rec_inc.start_reconfigure(3, observed, shifted)
+    n_advances = 0
+    while not job.advance(1):
+        n_advances += 1
+    assert n_advances == 5, "one generation per advance"
+    assert len(rec_inc.events) == 1
+    ea, eb = rec_sync.events[0], rec_inc.events[0]
+    assert np.array_equal(ea.new_partition, eb.new_partition)
+    assert ea.new_predicted_delta_acc == eb.new_predicted_delta_acc
+
+
 def test_reconfig_event_bookkeeping(setup):
     layers, cm, ev, part, plan = setup
     obs = _observe_fn(cm)

@@ -105,3 +105,245 @@ def test_cache_bytes_estimate():
     b = cache_bytes(cfg, batch=1, max_len=1024)
     # 16 layers x 2 (k+v) x 1024 x 16 kv x 128 hd x 2 bytes + pos
     assert 100e6 < b < 300e6
+
+
+# -- continuous batching ----------------------------------------------------
+
+def _mk_reqs(cfg, lengths, max_new, seed=10):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(zip(lengths, max_new))]
+
+
+def test_mixed_length_admission(small_lm):
+    """Admission/retirement under mixed prompt lengths with queue
+    pressure: every request completes with the right token count and no
+    drops, and each request's tokens are independent of which other
+    requests share the batch (slot independence)."""
+    cfg, params = small_lm
+    lengths = [3, 5, 8, 9, 4]
+    max_new = [4, 7, 3, 5, 6]
+
+    eng2 = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32))
+    out2 = eng2.generate(_mk_reqs(cfg, lengths, max_new))
+    assert all(r.done and len(r.out) == m for r, m in zip(out2, max_new))
+    s = eng2.stats()
+    assert s["dropped"] == 0 and s["completed"] == 5
+    assert s["max_queue_depth"] >= 1, "max_batch=2 must queue 5 requests"
+
+    eng4 = Engine(cfg, params, ServeConfig(max_batch=4, max_len=32))
+    out4 = eng4.generate(_mk_reqs(cfg, lengths, max_new))
+    for a, b in zip(out2, out4):
+        assert a.out == b.out, "tokens must not depend on batch sharing"
+
+
+def test_early_exit_no_extra_decode_steps(small_lm):
+    """The engine stops decoding the moment the last request retires
+    (the closed-batch engine used to run all maxnew steps regardless)."""
+    cfg, params = small_lm
+    eng = Engine(cfg, params, ServeConfig(max_batch=4, max_len=32))
+    eng.generate(_mk_reqs(cfg, [4], [5]))
+    # first token comes from prefill, so 5 tokens need only 4 decode steps
+    assert eng.stats()["decode_steps"] == 4
+    eng1 = Engine(cfg, params, ServeConfig(max_batch=4, max_len=32))
+    eng1.generate(_mk_reqs(cfg, [4], [1]))
+    assert eng1.stats()["decode_steps"] == 0
+
+
+def test_kv_integrity_across_hot_swap(small_lm):
+    """A hot swap must not disturb in-flight KV state: with a clean
+    environment (all-zero fault rates on every tier) a mid-stream swap
+    is token-identical to a run that never swaps."""
+    cfg, params = small_lm
+
+    def zero_rates(partition, scales):
+        z = np.zeros(cfg.n_layers, np.float32)
+        return z, z
+
+    p0 = np.zeros(cfg.n_layers, np.int64)
+    p1 = np.ones(cfg.n_layers, np.int64)
+
+    def run(swap_at):
+        eng = Engine(cfg, params, ServeConfig(max_batch=4, max_len=64),
+                     partition_to_rates=zero_rates)
+        eng.apply_partition(p0)
+        for r in _mk_reqs(cfg, [6, 8], [12, 12], seed=11):
+            eng.submit(r)
+        reqs = list(eng.completed)
+        for _ in range(swap_at):
+            eng.step()
+        if swap_at:
+            eng.apply_partition(p1)
+        eng.run()
+        return [r.out for r in sorted(eng.completed, key=lambda r: r.uid)]
+
+    assert run(swap_at=5) == run(swap_at=0)
+
+
+def test_slo_accounting(small_lm):
+    cfg, params = small_lm
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32))
+    out = eng.generate(_mk_reqs(cfg, [4, 6, 5], [6, 6, 6]))
+    for r in out:
+        assert r.submit_s <= r.admit_s <= r.first_token_s <= r.finish_s
+        assert r.ttft_s > 0 and r.tpot_s >= 0
+    s = eng.stats()
+    for key in ("decode_steps", "dropped", "swaps", "swap_stall_s_max",
+                "decode_s", "monitor_s", "ttft_s_mean", "tpot_s_mean"):
+        assert key in s
+    assert s["dropped"] == 0 and s["ttft_s_mean"] > 0
+
+
+# -- fault monitor ----------------------------------------------------------
+
+def _mcfg(**kw):
+    from repro.serve import MonitorConfig
+    base = dict(base_error_rate=1.0, ewma_alpha=1.0, scale_quantum=0.25,
+                degraded_factor=4.0, critical_factor=16.0,
+                recovery_ticks=2, watchdog_timeout_ticks=1000)
+    base.update(kw)
+    return MonitorConfig(**base)
+
+
+def test_monitor_state_machine_transitions():
+    from repro.serve import FaultMonitor, HealthState
+    mon = FaultMonitor(np.array([1.0, 1.0]), _mcfg())
+    mon.heartbeat()
+    mon.observe_errors([1.0, 1.0])
+    assert mon.tick() == HealthState.HEALTHY
+
+    mon.heartbeat()
+    mon.observe_errors([5.0, 1.0])            # ratio 5 >= 4
+    assert mon.tick() == HealthState.DEGRADED
+
+    mon.heartbeat()
+    mon.observe_errors([20.0, 1.0])           # ratio 20 >= 16
+    assert mon.tick() == HealthState.CRITICAL
+
+    # recovery needs `recovery_ticks` consecutive calm ticks (hysteresis)
+    mon.heartbeat()
+    mon.observe_errors([1.0, 1.0])
+    assert mon.tick() == HealthState.CRITICAL
+    mon.heartbeat()
+    mon.observe_errors([1.0, 1.0])
+    assert mon.tick() == HealthState.HEALTHY
+    assert len(mon.transitions) == 3
+
+
+def test_monitor_watchdog_presumes_dead():
+    from repro.serve import FaultMonitor, HealthState
+    mon = FaultMonitor(np.array([1.0, 1.0]),
+                       _mcfg(watchdog_timeout_ticks=3))
+    for _ in range(5):
+        mon.heartbeat(device=0)               # device 1 goes silent
+        mon.observe_errors([1.0, 1.0])
+        state = mon.tick()
+    assert state == HealthState.CRITICAL
+    assert mon.device_states()[0] == HealthState.HEALTHY
+    assert mon.device_states()[1] == HealthState.CRITICAL
+
+
+def test_monitor_estimates_scales_exactly():
+    """With alpha=1 and exact expected counts, the EWMA estimate must
+    reproduce the true environment scales bitwise (the quantum grid and
+    base_error_rate are powers of two)."""
+    from repro.serve import FaultMonitor
+    true = np.array([1.0, 32.0])
+    mon = FaultMonitor(np.array([1.0, 0.25]), _mcfg(base_error_rate=0.25))
+    mon.heartbeat()
+    mon.observe_errors(0.25 * true)
+    mon.tick()
+    assert np.array_equal(mon.estimated_scales(), true)
+
+
+# -- telemetry-fed reconfiguration ------------------------------------------
+
+def _surrogate_setup(seed=0):
+    cfg = get_config("olmo-1b").reduced()
+    layers = lm_layer_infos(cfg, seq=64)
+    cm = CostModel(layers, POD_TIERS)
+    ev = SurrogateAccuracyEvaluator(cm)
+    part = AFarePart(layers, POD_TIERS, acc_evaluator=ev,
+                     nsga2_config=NSGA2Config(population=16, generations=6,
+                                              seed=seed))
+    plan = part.optimize()
+
+    def observe(partition, scales):
+        old = cm.fault_scale.copy()
+        cm.fault_scale = np.asarray(scales, float)
+        v = float(cm.sensitivity_surrogate(partition[None, :])[0])
+        cm.fault_scale = old
+        return v
+
+    return cfg, part, plan, observe
+
+
+def test_telemetry_matches_oracle():
+    """The monitor-fed loop must make the same reconfiguration decisions
+    as oracle-fed simulate_deployment when the estimates are exact."""
+    from repro.core import simulate_deployment
+    from repro.serve import FaultMonitor
+    env = FaultEnvironment(base_scale=np.array([1.0, 0.25]),
+                           schedule={3: np.array([1.0, 32.0])})
+
+    cfg, part_a, plan_a, obs_a = _surrogate_setup()
+    theta = obs_a(plan_a.partition, env.base_scale) * 1.5 + 1e-9
+    rec_a = OnlineReconfigurator(part_a, plan_a, theta=theta,
+                                 observe_fn=obs_a, reopt_generations=4)
+    log = simulate_deployment(rec_a, env, n_steps=6)
+
+    cfg, part_b, plan_b, obs_b = _surrogate_setup()
+    rec_b = OnlineReconfigurator(part_b, plan_b, theta=theta,
+                                 observe_fn=obs_b, reopt_generations=4)
+    mon = FaultMonitor(env.base_scale, _mcfg(base_error_rate=0.25))
+    for t in range(6):
+        mon.heartbeat()
+        mon.observe_errors(0.25 * env.scales_at(t))   # exact expectation
+        mon.tick()
+        rec_b.step(t, mon.estimated_scales())
+
+    assert len(log["events"]) >= 1
+    assert len(rec_b.events) == len(rec_a.events)
+    for ea, eb in zip(rec_a.events, rec_b.events):
+        assert ea.step == eb.step
+        assert np.array_equal(ea.new_partition, eb.new_partition)
+        assert ea.observed_delta_acc == eb.observed_delta_acc
+
+
+def test_critical_reverts_to_last_safe(small_lm):
+    """CRITICAL falls back to the last-known-safe partition immediately
+    (before re-optimization completes) and abandons the stale job."""
+    from repro.serve import FaultMonitor
+    cfg, params = small_lm
+    _, part, plan, observe = _surrogate_setup()
+    base = np.array([1.0, 0.25])
+    theta = observe(plan.partition, base) * 1.1 + 1e-9
+    rec = OnlineReconfigurator(part, plan, theta=theta, observe_fn=observe,
+                               reopt_generations=2)
+    mon = FaultMonitor(base, _mcfg(base_error_rate=0.25))
+
+    def errors(tick):
+        # healthy -> device 1 degraded (ratio 8) -> device 1 critical
+        scale1 = 0.25 if tick <= 3 else (2.0 if tick <= 12 else 32.0)
+        return 0.25 * np.array([1.0, scale1])
+
+    def partition_to_rates(partition, scales):
+        r = 0.2 * np.asarray(scales)[partition]
+        return r.astype(np.float32), r.astype(np.float32)
+
+    eng = Engine(cfg, params, ServeConfig(max_batch=4, max_len=64,
+                                          canary_every=2),
+                 reconfigurator=rec, partition_to_rates=partition_to_rates,
+                 monitor=mon, error_source=errors)
+    p0 = plan.partition.copy()
+    out = eng.generate(_mk_reqs(cfg, [4, 6], [24, 24], seed=12))
+    assert all(r.done for r in out)
+    kinds = [e["kind"] for e in eng.swap_events]
+    assert "reopt" in kinds, "degraded phase should re-optimize and swap"
+    assert "revert" in kinds, "critical phase should revert immediately"
+    first_revert = kinds.index("revert")
+    assert kinds.index("reopt") < first_revert
+    assert np.array_equal(eng.swap_events[first_revert]["new_partition"], p0)
+    assert eng.stats()["dropped"] == 0
