@@ -58,6 +58,17 @@ span-ladder dispatch bound
 ``branch_nodes + chains x ceil(log2(max_chain))``.  Combine with
 ``--lm ARCH`` to pick a different architecture.
 
+``--backend tables|pallas`` runs ONLY the fault-backend comparison
+(``run_fault_backend``): the O(L×D) weight-table path vs the in-tile
+pallas path at pop 60, bit-identical ΔAcc asserted, reporting
+per-candidate wall-clock, compiled peak memory, resident fault-state
+bytes and the cost of a fault-environment change, to
+results/bench/fault_backend.json.  ``--smoke --backend pallas`` is the
+CI guard: it FAILS if the pallas evaluator holds any resident
+fault-table bytes, if its eval HBM footprint (dispatch I/O + resident
+fault state) is not strictly below the tables path's, or if an
+environment change rebuilt any executable.
+
 The default configuration is the *dispatch-bound* regime — a small
 calibration batch, the regime an edge-accelerator deployment sees where
 a forward pass is microseconds and per-candidate dispatch overhead
@@ -212,6 +223,158 @@ def run_benchmark(model_name: str = "alexnet", pop: int = 60, n_eval: int = 1,
         "table_build_s": table_build_s,
     }
     return rec
+
+
+def run_fault_backend(model_name: str = "alexnet", pop: int = 60,
+                      n_eval: int = 1, width: float = 0.125, img: int = 16,
+                      reps: int = 3, seed: int = 0,
+                      devices: int | str = "auto") -> dict:
+    """``tables`` vs ``pallas`` fault backends on one pop-``pop``
+    population (the ISSUE 7 tentpole comparison).
+
+    The tables path pre-corrupts every (unit, device) weight variant —
+    O(params × devices) resident float copies gathered per candidate.
+    The pallas path keeps ONE resident int8 ``QTensor`` copy and flips
+    bits inside the compute (``kernels.ops.fault_matmul``), so its
+    resident fault state is O(params) and independent of the device
+    ladder.  Both produce bit-identical ΔAcc (asserted here and pinned
+    by tests/test_fault_backends.py); this scenario reports what
+    differs: per-candidate wall-clock, compiled peak memory at the full
+    population batch, resident fault-state bytes, and what a
+    fault-environment change costs (pallas: nothing is rebuilt).
+
+    Memory accounting: ``eval_hbm_bytes`` is the eval-time HBM
+    footprint — dispatch argument + output buffers plus the resident
+    fault state the evaluator keeps alive between dispatches (float
+    weight-variant tables vs one int8 QTensor copy).  The raw
+    ``compiled_peak_bytes`` (includes XLA temps) is reported alongside
+    but NOT compared: on CPU CI the pallas path runs the exact
+    interpret-mode composition, whose per-row corrupted-weight temps
+    are an emulation artifact — the fused tile keeps that state in
+    VMEM tiles and never writes it to HBM (kernels/ops.py).
+
+    The ``--smoke --backend pallas`` CI guards:
+      * the pallas evaluator must hold ZERO resident fault-table bytes;
+      * its eval HBM footprint must be STRICTLY below the tables
+        path's at the same population;
+      * a fault-environment change must rebuild nothing.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import FaultSpec, InferenceAccuracyEvaluator
+    from repro.core.costmodel import PAPER_DEVICES
+    from repro.core.eval_engine import peak_memory_bytes
+    from repro.models.cnn import (CNN_MODELS, build_weight_fault_tables,
+                                  quantize_unit_params)
+
+    model = CNN_MODELS[model_name]
+    L = model.n_units
+    scale = np.array([d.fault_scale for d in PAPER_DEVICES], np.float32)
+    spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2)
+    rng = np.random.default_rng(seed)
+
+    params = model.init(jax.random.PRNGKey(0), num_classes=16, width=width,
+                        img=img)
+    x = jnp.asarray(rng.normal(size=(n_eval, img, img, 3)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 16, size=(n_eval,)))
+
+    def apply_fn(p, xx, wr, ar, s):
+        return model.apply(p, xx, w_rates=wr, a_rates=ar, seed=s)
+
+    t0 = time.perf_counter()
+    w_rates = np.asarray(spec.weight_fault_rate * scale, np.float32)
+    tables = build_weight_fault_tables(params, w_rates, base_seed=0)
+    table_build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    qp = quantize_unit_params(params)
+    quantize_s = time.perf_counter() - t0
+
+    ev_tab = InferenceAccuracyEvaluator(
+        apply_fn, params, x, labels, spec, scale, weight_tables=tables,
+        fault_backend="tables", devices=devices)
+    ev_pal = InferenceAccuracyEvaluator(
+        apply_fn, params, x, labels, spec, scale, quant_params=qp,
+        fault_backend="pallas", devices=devices)
+
+    seen, rows = set(), []
+    while len(rows) < pop:
+        r = tuple(rng.integers(0, len(scale), size=L).tolist())
+        if r not in seen:
+            seen.add(r)
+            rows.append(r)
+    P = np.array(rows)
+
+    v_tab = ev_tab.delta_acc(P)          # warm (compiles excluded below)
+    v_pal = ev_pal.delta_acc(P)
+    assert (v_tab == v_pal).all(), \
+        "fault backends must be bit-identical (tables vs pallas)"
+
+    def timeit(ev):
+        best = np.inf
+        for _ in range(reps):
+            ev._cache.clear()
+            t0 = time.perf_counter()
+            ev.delta_acc(P)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_tab = timeit(ev_tab)
+    t_pal = timeit(ev_pal)
+
+    # memory at the full population batch: dispatch I/O + resident
+    # fault state (the HBM footprint), with the raw compiled peak
+    # alongside — see the docstring for why the peak is not compared
+    def io_bytes(compiled):
+        try:
+            m = compiled.memory_analysis()
+        except Exception:
+            return 0
+        return sum(int(getattr(m, f, 0) or 0) for f in
+                   ("argument_size_in_bytes", "output_size_in_bytes"))
+
+    seed32 = jnp.int32(0)
+    tab_exec = ev_tab._acc_batch_tables.lower(
+        jnp.zeros((pop, L), jnp.int32), seed32).compile()
+    zd = jnp.zeros((len(scale),), jnp.float32)
+    pal_exec = ev_pal._ensure_pallas_batch().lower(
+        jnp.zeros((pop, L), jnp.int32), zd, zd, seed32).compile()
+
+    mem = {
+        "tables": {"fault_table_bytes": ev_tab.fault_table_bytes(),
+                   "fault_state_bytes": ev_tab.fault_state_bytes(),
+                   "compiled_peak_bytes": peak_memory_bytes(tab_exec),
+                   "eval_hbm_bytes": (io_bytes(tab_exec)
+                                      + ev_tab.fault_state_bytes())},
+        "pallas": {"fault_table_bytes": ev_pal.fault_table_bytes(),
+                   "fault_state_bytes": ev_pal.fault_state_bytes(),
+                   "compiled_peak_bytes": peak_memory_bytes(pal_exec),
+                   "eval_hbm_bytes": (io_bytes(pal_exec)
+                                      + ev_pal.fault_state_bytes())},
+    }
+
+    # a fault-environment change: pallas rebuilds nothing, tables must
+    # drop its variants (degrading to generic until rebuilt)
+    ev_pal.device_fault_scale = scale * 0.5
+    ev_tab.device_fault_scale = scale * 0.5
+    env_change = {
+        "pallas_rebuilds": ev_pal._fault_env_rebuilds,
+        "tables_rebuilds": ev_tab._fault_env_rebuilds,
+        "tables_backend_after": ev_tab.fault_backend,
+        "table_build_s": table_build_s,
+        "quantize_s": quantize_s,
+    }
+
+    return {
+        "config": {"model": model_name, "pop": pop, "n_eval": n_eval,
+                   "width": width, "img": img, "reps": reps, "seed": seed,
+                   "n_devices": len(scale), "eval_devices": ev_pal.devices},
+        "per_candidate_ms": {"tables": t_tab / pop * 1e3,
+                             "pallas": t_pal / pop * 1e3},
+        "pallas_speedup_vs_tables": t_tab / t_pal,
+        "memory_bytes": mem,
+        "env_change": env_change,
+        "bitwise_equal": True,
+    }
 
 
 def _trace_nsga2(layers, devices, pop, gens, seed):
@@ -621,6 +784,15 @@ def main():
                          "unless fused dispatches are <= half the "
                          "unfused count and within the span-ladder "
                          "bound; --lm ARCH picks the architecture)")
+    ap.add_argument("--backend", choices=["tables", "pallas"], default=None,
+                    help="run ONLY the fault-backend comparison "
+                         "(run_fault_backend): tables vs pallas at pop-60, "
+                         "bit-identical ΔAcc asserted, per-candidate "
+                         "wall-clock + peak/resident memory reported "
+                         "(writes fault_backend.json; with --smoke, fails "
+                         "if the pallas evaluator holds any resident "
+                         "fault-table bytes or its eval HBM footprint is "
+                         "not strictly below the tables path's)")
     ap.add_argument("--lm", metavar="ARCH", default=None,
                     help="run ONLY the transformer generational replay "
                          "on this arch's reduced config (writes "
@@ -640,6 +812,49 @@ def main():
     ebs = parse_eval_batch_size(args.eval_batch_size)
     dev = parse_devices(args.devices)
     dev = "auto" if dev is None else dev
+
+    if args.backend:
+        rec = run_fault_backend(model_name=args.model, pop=args.pop,
+                                n_eval=args.n_eval, width=args.width,
+                                img=args.img,
+                                reps=2 if args.smoke else args.reps,
+                                devices=dev)
+        ms = rec["per_candidate_ms"]
+        mem = rec["memory_bytes"]
+        print("# benchmark,us_per_call,derived")
+        print(f"eval_engine.fault_backend_tables,{ms['tables']*1e3:.0f},"
+              f"table_bytes={mem['tables']['fault_table_bytes']} "
+              f"eval_hbm={mem['tables']['eval_hbm_bytes']}")
+        print(f"eval_engine.fault_backend_pallas,{ms['pallas']*1e3:.0f},"
+              f"speedup={rec['pallas_speedup_vs_tables']:.2f}x "
+              f"table_bytes={mem['pallas']['fault_table_bytes']} "
+              f"state_bytes={mem['pallas']['fault_state_bytes']} "
+              f"eval_hbm={mem['pallas']['eval_hbm_bytes']} "
+              f"env_rebuilds={rec['env_change']['pallas_rebuilds']}")
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "fault_backend.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(f"# wrote {out}")
+        if args.smoke and args.backend == "pallas":
+            pal, tab = mem["pallas"], mem["tables"]
+            if pal["fault_table_bytes"] > 0:
+                print(f"FAIL: pallas backend holds "
+                      f"{pal['fault_table_bytes']} resident fault-table "
+                      f"bytes (must be zero — corrupted weights must "
+                      f"never materialise)")
+                sys.exit(1)
+            if pal["eval_hbm_bytes"] >= tab["eval_hbm_bytes"]:
+                print(f"FAIL: pallas eval HBM footprint "
+                      f"{pal['eval_hbm_bytes']} B is not strictly below "
+                      f"the tables path's {tab['eval_hbm_bytes']} B at "
+                      f"pop {args.pop}")
+                sys.exit(1)
+            if rec["env_change"]["pallas_rebuilds"] != 0:
+                print("FAIL: pallas backend rebuilt executables on a "
+                      "fault-environment change (rates must be traced)")
+                sys.exit(1)
+        return rec
 
     if args.fused:
         rec = run_chain_fusion(arch=args.lm or "olmo-1b", pop=args.pop,

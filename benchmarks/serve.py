@@ -31,6 +31,14 @@ With ``--smoke`` the run doubles as the CI guard and FAILS if:
 ``--acc staged`` swaps the surrogate ΔAcc observer for the true
 staged fault-injection evaluator (``make_lm_accuracy_evaluator``) on a
 deepened reduced LM — slower, used by the nightly lane.
+
+``--backend generic|tables|pallas`` picks the evaluator's fault
+backend (implies ``--acc staged``).  Under ``pallas`` the fault rates
+are traced arguments, so the canary's per-swap
+``device_fault_scale = ...`` hot-swaps reuse every compiled
+executable; with ``--smoke`` the run additionally FAILS unless at
+least one fault-environment change actually happened during the trace
+and the evaluator recorded zero rebuilds across all of them.
 """
 from __future__ import annotations
 
@@ -66,17 +74,28 @@ def build_system(args):
     spec = FaultSpec(weight_fault_rate=0.2, act_fault_rate=0.2, bits=8)
     nsga2_cfg = NSGA2Config(population=16, generations=8, seed=args.seed)
 
+    # counts true fault-environment changes the canary pushed into the
+    # evaluator (successive distinct scale vectors) — the pallas smoke
+    # guard checks these were absorbed without a rebuild
+    env_swaps = {"n": 0, "last": None}
+
     if args.acc == "staged":
         cal_params, cal_batch, cal_labels = lm_calibration_setup(
             cfg, B=2, S=8, seed=7)
         ev = make_lm_accuracy_evaluator(
             cfg, cal_params, cal_batch, cal_labels, spec,
-            device_fault_scale=base_scale.astype(np.float32))
+            device_fault_scale=base_scale.astype(np.float32),
+            fault_backend=getattr(args, "backend", None) or "auto")
         part = lm_partitioner(cfg, ev, devices=POD_TIERS, seq=64,
                               fault_spec=spec, nsga2_config=nsga2_cfg)
 
         def observe(partition, scales):
-            ev.device_fault_scale = np.asarray(scales, np.float32)
+            sc = np.asarray(scales, np.float32)
+            if env_swaps["last"] is not None and \
+                    not np.array_equal(sc, env_swaps["last"]):
+                env_swaps["n"] += 1
+            env_swaps["last"] = sc.copy()
+            ev.device_fault_scale = sc
             return float(ev.delta_acc(np.asarray(partition)[None, :])[0])
     else:
         layers = lm_layer_infos(cfg, seq=64)
@@ -99,7 +118,8 @@ def build_system(args):
         return ((spec.weight_fault_rate * r).astype(np.float32),
                 (spec.act_fault_rate * r).astype(np.float32))
 
-    return cfg, params, base_scale, part, observe, partition_to_rates
+    return (cfg, params, base_scale, part, observe, partition_to_rates,
+            ev, env_swaps)
 
 
 def run_trace(args):
@@ -107,7 +127,8 @@ def run_trace(args):
     from repro.serve import (Engine, FaultMonitor, MonitorConfig, Request,
                              ServeConfig)
 
-    cfg, params, base_scale, part, observe, p2r = build_system(args)
+    cfg, params, base_scale, part, observe, p2r, ev, env_swaps = \
+        build_system(args)
     plan = part.optimize()
 
     # fault schedule: tier 1 (the reliable one the plan leans on)
@@ -202,6 +223,11 @@ def run_trace(args):
             for e in eng.swap_events],
         "observed_delta_acc": [
             {"step": s, "delta": d} for s, d in eng.observed_log],
+        "fault_env": {
+            "backend": getattr(ev, "fault_backend", None),
+            "scale_changes": env_swaps["n"],
+            "evaluator_rebuilds": getattr(ev, "_fault_env_rebuilds", None),
+        },
     }
     return rec_out
 
@@ -212,6 +238,12 @@ def main():
                     help="CI mode: guards fail the run")
     ap.add_argument("--acc", choices=["surrogate", "staged"],
                     default="surrogate")
+    ap.add_argument("--backend", choices=["generic", "tables", "pallas"],
+                    default=None,
+                    help="fault backend for the staged ΔAcc evaluator "
+                         "(implies --acc staged); with --smoke and "
+                         "pallas, fail unless the canary's fault-scale "
+                         "hot-swaps rebuilt nothing")
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--units", type=int, default=6)
     ap.add_argument("--steps", type=int, default=120)
@@ -225,6 +257,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=os.path.join(RESULTS, "serving.json"))
     args = ap.parse_args()
+    if args.backend:
+        args.acc = "staged"
 
     rec = run_trace(args)
     s = rec["stats"]
@@ -237,6 +271,11 @@ def main():
           f"p99={rec['ttft_s']['p99']:.4f}")
     print(f"serving.swaps,{s['swaps']},reverts={s['reverts']} "
           f"dropped={s['dropped']}")
+    fe = rec["fault_env"]
+    if fe["backend"] is not None:
+        print(f"serving.fault_env,{fe['backend']},"
+              f"scale_changes={fe['scale_changes']} "
+              f"evaluator_rebuilds={fe['evaluator_rebuilds']}")
     for e in rec["swap_events"]:
         print(f"serving.swap@{e['step']},{e['kind']},"
               f"pre={e['pre_delta']} post={e['post_delta']} "
@@ -274,6 +313,18 @@ def main():
             print(f"FAIL: monitor overhead {s['monitor_s']:.3f} s is >= 5% "
                   f"of decode wall-clock {s['decode_s']:.3f} s")
             ok = False
+        if args.backend == "pallas":
+            if fe["scale_changes"] < 1:
+                print("FAIL: trace completed without a single "
+                      "fault-environment change — the hot-swap claim "
+                      "was never exercised")
+                ok = False
+            if fe["evaluator_rebuilds"] != 0:
+                print(f"FAIL: pallas evaluator rebuilt executables "
+                      f"{fe['evaluator_rebuilds']} time(s) across "
+                      f"{fe['scale_changes']} fault-scale changes "
+                      "(rates are traced arguments — must be zero)")
+                ok = False
         if not ok:
             sys.exit(1)
         print("smoke guards OK: zero drops, strict post-swap ΔAcc "

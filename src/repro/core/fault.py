@@ -34,13 +34,22 @@ __all__ = ["FaultSpec", "FaultContext", "corrupt_tensor", "corrupt_tree",
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
-    """Fault configuration (paper Sec. VI-B example config)."""
+    """Fault configuration (paper Sec. VI-B example config).
+
+    ``fault_model`` selects the corruption semantics on the vulnerable
+    LSBs: ``"flip"`` (paper Alg. 2, independent per-bit flips),
+    ``"stuck0"``/``"stuck1"`` (per-element stuck-at) or ``"mbu"``
+    (multi-bit-upset bursts of ``mbu_width`` consecutive bits) — see
+    ``kernels/faultmodel.py``.
+    """
 
     weight_fault_rate: float = 0.2     # per-bit flip probability, weights
     act_fault_rate: float = 0.2        # per-bit flip probability, activations
     faulty_bits: int = 4               # b vulnerable LSBs
     bits: int = 16                     # N_q fixed-point width
     enabled: bool = True
+    fault_model: str = "flip"          # flip | stuck0 | stuck1 | mbu
+    mbu_width: int = 2                 # burst width for "mbu"
 
     @property
     def quant_spec(self) -> QuantSpec:
@@ -70,7 +79,9 @@ def corrupt_tensor(x: jax.Array, spec: FaultSpec, seed, *,
     rate = spec.weight_fault_rate if domain == "weight" else spec.act_fault_rate
     if not spec.enabled or rate <= 0.0:
         return x
-    return ops.quant_bitflip(x, seed, rate, spec.faulty_bits, spec.quant_spec)
+    return ops.quant_bitflip(x, seed, rate, spec.faulty_bits, spec.quant_spec,
+                             fault_model=spec.fault_model,
+                             mbu_width=spec.mbu_width)
 
 
 def corrupt_tree(tree, spec: FaultSpec, base_seed: int, *,
@@ -121,7 +132,9 @@ class FaultContext:
             return x
         seed = layer_seed(self.base_seed, layer_idx, 0 if domain == "weight" else 1)
         return ops.quant_bitflip(x, seed, rate, self.spec.faulty_bits,
-                                 self.spec.quant_spec)
+                                 self.spec.quant_spec,
+                                 fault_model=self.spec.fault_model,
+                                 mbu_width=self.spec.mbu_width)
 
 
 def empirical_flip_rate(q_clean: jax.Array, q_faulty: jax.Array,

@@ -37,7 +37,18 @@ device memory).  Two batched paths exist:
     factor as ``base_rate * device_fault_scale[P_l]``, so they are
     precomputed once per search and *gathered* per candidate instead of
     re-hashed.  This removes the O(params · faulty_bits) per-candidate
-    PRNG work and is bit-identical to the inline path.
+    PRNG work and is bit-identical to the inline path;
+  * pallas — when ``quant_params`` is given
+    (``fault_backend="pallas"``): the model's corruptible weights live
+    as ONE resident int8 ``QTensor`` copy and the flips happen inside
+    the compute itself (``kernels.ops.fault_matmul`` — fused into the
+    matmul tile on TPU, the exact bitflip→dequant→matmul composition
+    in interpret mode), so no corrupted weight variant is ever
+    materialised: resident fault state is O(params) instead of the
+    tables' O(params × devices), and the per-device rate arrays + seed
+    are traced arguments, so fault-environment hot-swaps reuse every
+    compiled executable.  Bit-identical to both other paths on
+    CPU/interpret (tests/test_fault_backends.py).
 
 Both batched paths produce results bit-identical to the per-individual
 loop (the per-row computation is unchanged; vmap only adds the
@@ -110,6 +121,24 @@ __all__ = [
 _SEGMENT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
+def _pallas_env_args(ref):
+    """Fetch the evaluator's CURRENT fault environment as the traced
+    trailing arguments every pallas-backend executable takes:
+    ``(w_rates_by_device, a_rates_by_device, base_seed)``.
+
+    ``ref`` is a ``weakref.ref`` to the evaluator — the wrappers that
+    call this live in the weak-keyed ``_SEGMENT_CACHE`` (and on the
+    evaluator itself), so a strong capture would leak the evaluator,
+    its params and every compiled executable.  Reading at call time is
+    what makes ``device_fault_scale`` hot-swaps free: the executables
+    are environment-agnostic, only these arguments change.
+    """
+    ev = ref()
+    return (jnp.asarray(ev.w_rates_by_device),
+            jnp.asarray(ev.a_rates_by_device),
+            jnp.int32(ev.base_seed))
+
+
 class InferenceAccuracyEvaluator:
     """ΔAcc via true fault-injected inference (paper Alg. 1 lines 5-7).
 
@@ -130,6 +159,25 @@ class InferenceAccuracyEvaluator:
         tables (``repro.models.cnn.build_weight_fault_tables``).  When
         given, ``apply_fn`` must accept ``weight_rates=None`` and skip
         weight corruption (the gathered weights are already corrupted).
+      quant_params: optional quantized parameter set (``layers.QTensor``
+        leaves at the float leaves' flatten positions — CNN:
+        ``models.cnn.quantize_unit_params``, LM:
+        ``LMStepModel.quant_unit_params``).  Required by the
+        ``"pallas"`` fault backend: corruption then happens on the
+        resident int8 copy inside the compute (matmul-tile fused on
+        TPU), so no corrupted weight variant ever materialises.
+      fault_backend: which ΔAcc fault-injection path dispatches —
+        ``"generic"`` (inline quantize→corrupt→dequantize at traced
+        per-layer rates), ``"tables"`` (gather pre-corrupted
+        ``weight_tables`` per gene), ``"pallas"`` (in-tile corruption
+        of ``quant_params``; per-device rate arrays and seed are
+        *traced* arguments, so fault-environment hot-swaps never
+        rebuild an executable and resident fault state is O(params),
+        not O(params × devices)).  ``"auto"`` = ``tables`` iff
+        ``weight_tables`` is given, else ``generic``.  All three are
+        bitwise-identical on CPU/interpret
+        (tests/test_fault_backends.py); the TPU pallas tile holds
+        under tolerance.
       step_fn: optional per-unit forward ``step(i, params_i, x, wr, ar,
         seed)`` (the CNN models' ``step``).  Enables the staged
         prefix-reuse engine; ``params`` must then be the per-unit list
@@ -169,6 +217,8 @@ class InferenceAccuracyEvaluator:
                  base_seed: int = 0,
                  eval_batch_size: int | str | None = None,
                  weight_tables: list | None = None,
+                 quant_params: list | None = None,
+                 fault_backend: str | None = "auto",
                  step_fn: Callable | None = None,
                  eval_strategy: str = "auto",
                  n_units: int | None = None,
@@ -181,6 +231,23 @@ class InferenceAccuracyEvaluator:
         self.labels = labels
         self.weight_tables = weight_tables
         self._acc_batch_tables = None
+        self._qparams = quant_params
+        self._acc_batch_pallas = None
+        self._fault_env_rebuilds = 0
+        if fault_backend in (None, "auto"):
+            fault_backend = "tables" if weight_tables is not None \
+                else "generic"
+        if fault_backend not in ("generic", "tables", "pallas"):
+            raise ValueError(f"unknown fault_backend {fault_backend!r}")
+        if fault_backend == "pallas" and quant_params is None:
+            raise ValueError("fault_backend='pallas' needs quant_params "
+                             "(QTensor-quantized model parameters)")
+        if fault_backend == "pallas" and weight_tables is not None:
+            raise ValueError("fault_backend='pallas' takes quant_params, "
+                             "not weight_tables — pass one or the other")
+        if fault_backend == "tables" and weight_tables is None:
+            raise ValueError("fault_backend='tables' needs weight_tables")
+        self._fault_backend = fault_backend
         self._apply_fn = apply_fn
         self._params = params
         self._x = x
@@ -323,11 +390,14 @@ class InferenceAccuracyEvaluator:
                 self._built_unit_fns = self._build_unit_fns()
             unit = self._built_unit_fns[start]
             return lambda acts, genes, f=unit: f(acts, genes[:, 0])
+        if self._fault_backend == "pallas":
+            return self._build_segment_fn_pallas(start, length)
         step, x0, labels = self._step_fn, self._x, self.labels
         L = self._n_units
         a_dev = jnp.asarray(self.a_rates_by_device)
         w_dev = jnp.asarray(self.w_rates_by_device)
-        tables = self.weight_tables
+        tables = self.weight_tables if self._fault_backend == "tables" \
+            else None
         params = self._params
         final = start + length == L
         base = int(self.base_seed)
@@ -353,6 +423,46 @@ class InferenceAccuracyEvaluator:
         batched = jax.jit(jax.vmap(seg))
         return lambda acts, genes, b=batched: b(acts, genes)
 
+    def _build_segment_fn_pallas(self, start: int, length: int) -> Callable:
+        """Fused segment executable for the ``pallas`` backend.
+
+        Same composition as :meth:`_build_segment_fn`, but the per-unit
+        params are the resident ``QTensor`` set (corruption happens
+        inside the unit's contractions via ``layers.fault_dense``) and
+        the per-device rate arrays + base seed enter as TRACED
+        broadcast arguments instead of baked-in constants — one
+        compiled segment serves every fault environment, so
+        ``device_fault_scale`` hot-swaps keep the whole executable
+        ladder.  The returned wrapper re-reads the evaluator's current
+        environment per call through a weakref (no strong ``self``
+        capture — see ``_pallas_env_args``).
+        """
+        step, x0, labels = self._step_fn, self._x, self.labels
+        L = self._n_units
+        qp = self._qparams
+        final = start + length == L
+        ref = weakref.ref(self)
+
+        def seg(x, genes, w_dev, a_dev, sd):
+            for k in range(length):
+                i = start + k
+                d = genes[k]
+                x = step(i, qp[i], x, w_dev[d], a_dev[d], sd + 7919 * i)
+            if final:
+                pred = jnp.argmax(x, axis=-1)
+                return jnp.mean((pred == labels).astype(jnp.float32))
+            return x
+
+        if start == 0:
+            batched = jax.jit(jax.vmap(
+                lambda g, w, a, s: seg(x0, g, w, a, s),
+                in_axes=(0, None, None, None)))
+            return lambda acts, genes, b=batched, r=ref: \
+                b(genes, *_pallas_env_args(r))
+        batched = jax.jit(jax.vmap(seg, in_axes=(0, 0, None, None, None)))
+        return lambda acts, genes, b=batched, r=ref: \
+            b(acts, genes, *_pallas_env_args(r))
+
     def _build_unit_fns(self) -> list:
         """One jitted vmapped executable per unit depth.
 
@@ -364,11 +474,14 @@ class InferenceAccuracyEvaluator:
         batch; the final depth folds in the Top-1 accuracy reduction so
         logits never hit the activation store.
         """
+        if self._fault_backend == "pallas":
+            return self._build_unit_fns_pallas()
         step, x, labels = self._step_fn, self._x, self.labels
         L = self._n_units
         a_dev = jnp.asarray(self.a_rates_by_device)
         w_dev = jnp.asarray(self.w_rates_by_device)
-        tables = self.weight_tables
+        tables = self.weight_tables if self._fault_backend == "tables" \
+            else None
         fns = []
         for i in range(L):
             s_i = int(self.base_seed) + 7919 * i
@@ -394,11 +507,132 @@ class InferenceAccuracyEvaluator:
                 fns.append(lambda acts, devs, b=batched: b(acts, devs))
         return fns
 
+    def _build_unit_fns_pallas(self) -> list:
+        """Per-unit executables for the ``pallas`` backend.
+
+        The unit step runs on the resident ``QTensor`` params (flips
+        happen inside the unit's contractions), and the per-device rate
+        arrays + base seed are TRACED broadcast arguments — one
+        compiled executable per unit depth serves every fault
+        environment.  Wrappers fetch the evaluator's current arrays at
+        call time through a weakref (``_pallas_env_args``), so a
+        ``device_fault_scale`` assignment changes the next call's
+        arguments without touching any compiled state.
+        """
+        step, x, labels = self._step_fn, self._x, self.labels
+        L = self._n_units
+        qp = self._qparams
+        ref = weakref.ref(self)
+        fns = []
+        for i in range(L):
+            p_i = qp[i]
+
+            def one(act, d, w_dev, a_dev, sd, i=i, p_i=p_i):
+                return step(i, p_i, act, w_dev[d], a_dev[d], sd + 7919 * i)
+            if i == L - 1:
+                def one(act, d, w_dev, a_dev, sd, unit=one):
+                    logits = unit(act, d, w_dev, a_dev, sd)
+                    pred = jnp.argmax(logits, axis=-1)
+                    return jnp.mean((pred == labels).astype(jnp.float32))
+            if i == 0:
+                batched = jax.jit(jax.vmap(
+                    lambda d, w, a, s, f=one: f(x, d, w, a, s),
+                    in_axes=(0, None, None, None)))
+                fns.append(lambda acts, devs, b=batched, r=ref:
+                           b(devs, *_pallas_env_args(r)))
+            else:
+                batched = jax.jit(jax.vmap(
+                    one, in_axes=(0, 0, None, None, None)))
+                fns.append(lambda acts, devs, b=batched, r=ref:
+                           b(acts, devs, *_pallas_env_args(r)))
+        return fns
+
     def staged_stats(self) -> dict:
         """Prefix-reuse accounting (unit runs, hits, evictions, ...)."""
         if self._prefix_engine is None:
             return {}
         return self._prefix_engine.stats()
+
+    @property
+    def fault_backend(self) -> str:
+        """Which ΔAcc fault-injection path dispatches: ``"generic"``,
+        ``"tables"`` or ``"pallas"`` (see the constructor)."""
+        return self._fault_backend
+
+    @fault_backend.setter
+    def fault_backend(self, value: str | None):
+        """Switch the injection path.  Backends are value-identical
+        (bitwise on CPU/interpret), so this is a cost decision; the
+        path-specific executables and cached activations are dropped
+        and rebuilt lazily under the new backend."""
+        if value in (None, "auto"):
+            value = "tables" if self.weight_tables is not None \
+                else "generic"
+        if value not in ("generic", "tables", "pallas"):
+            raise ValueError(f"unknown fault_backend {value!r}")
+        if value == self._fault_backend:
+            return
+        if value == "pallas" and self._qparams is None:
+            raise ValueError("fault_backend='pallas' needs quant_params "
+                             "(QTensor-quantized model parameters) at "
+                             "construction")
+        if value == "tables" and self.weight_tables is None:
+            raise ValueError("fault_backend='tables' needs weight_tables "
+                             "(they were dropped or never built)")
+        self._fault_backend = value
+        self._built_unit_fns = None
+        _SEGMENT_CACHE.pop(self, None)
+        self._engine._cache.clear()
+        if self._prefix_engine is not None:
+            self._prefix_engine.store.clear()
+        if getattr(self, "_ebs_auto", False):
+            # the probed chunk size was fitted to the OLD backend's
+            # per-row footprint; re-resolve against the new path
+            self.eval_batch_size = "auto"
+
+    def _ensure_pallas_batch(self) -> Callable:
+        """Build the full-forward pallas batch executable once: rows of
+        device ids -> accuracies, with the per-device rate arrays and
+        seed traced (same hot-swap contract as the staged pallas fns).
+        Gathering ``w_dev[p]`` inside the trace is bitwise-identical to
+        the generic path's host-side ``w_rates_by_device[rows]``."""
+        if self._acc_batch_pallas is None:
+            apply_fn, qp = self._apply_fn, self._qparams
+            x, labels = self._x, self.labels
+
+            @jax.jit
+            def _batch(P_dev, w_dev, a_dev, seed):
+                def row(p):
+                    logits = apply_fn(qp, x, w_dev[p], a_dev[p], seed)
+                    pred = jnp.argmax(logits, axis=-1)
+                    return jnp.mean((pred == labels).astype(jnp.float32))
+                return jax.vmap(row)(P_dev)
+
+            self._acc_batch_pallas = _batch
+        return self._acc_batch_pallas
+
+    def fault_table_bytes(self) -> int:
+        """Resident bytes of pre-corrupted weight-table variants — the
+        O(L × D) state the ``pallas`` backend eliminates (its value
+        there is 0, which benchmarks/eval_engine.py guards)."""
+        if self.weight_tables is None:
+            return 0
+        return int(sum(int(leaf.nbytes)
+                       for t in self.weight_tables
+                       for leaf in jax.tree.leaves(t)
+                       if hasattr(leaf, "nbytes")))
+
+    def fault_state_bytes(self) -> int:
+        """Resident bytes of backend-specific fault state: the weight
+        tables (``tables``), the quantized int8 parameter copy
+        (``pallas`` — O(params), device-count independent), or 0
+        (``generic``)."""
+        if self._fault_backend == "pallas":
+            from repro.models.layers import QTensor
+            return int(sum(int(leaf.qw.nbytes) + int(leaf.scale.nbytes)
+                           for leaf in jax.tree.leaves(self._qparams)
+                           if isinstance(leaf, QTensor)))
+        return self.fault_table_bytes()
 
     @property
     def devices(self) -> int:
@@ -453,11 +687,21 @@ class InferenceAccuracyEvaluator:
         The online reconfigurator (runtime.py) assigns this when the
         observed environment shifts: the per-device rate arrays are
         re-derived (indexing after the multiply stays bitwise-identical
-        to the historical ``rate * scale[P]``), the chromosome cache is
-        invalidated, and any pre-corrupted weight tables are dropped —
-        they encode the OLD rates — falling back to the generic vmap
-        path (rebuild tables via ``build_weight_fault_tables`` to get
-        the fast path back).
+        to the historical ``rate * scale[P]``) and the chromosome cache
+        is invalidated.  What ELSE it costs depends on the backend:
+
+        * ``pallas`` — nothing.  Every pallas executable takes the rate
+          arrays and seed as traced arguments, so the compiled unit,
+          segment and batch executables all survive; only cached
+          RESULTS (row cache, staged activation store) encode the old
+          rates and are dropped.  ``_fault_env_rebuilds`` stays 0 —
+          benchmarks/serve.py's hot-swap guard pins this.
+        * ``tables`` / ``generic`` — the pre-corrupted weight tables
+          (which encode the OLD rates) are dropped, degrading
+          ``tables`` to ``generic`` until tables are rebuilt, and the
+          staged executables (which close over the rate arrays as
+          constants) are invalidated; ``_fault_env_rebuilds`` counts
+          these teardowns.
         """
         value = np.asarray(value, np.float32)
         changed = (getattr(self, "_device_fault_scale", None) is not None
@@ -470,8 +714,15 @@ class InferenceAccuracyEvaluator:
         if changed:
             if getattr(self, "_engine", None) is not None:
                 self._engine._cache.clear()
+            if self._fault_backend == "pallas":
+                if getattr(self, "_prefix_engine", None) is not None:
+                    self._prefix_engine.store.clear()
+                return
+            self._fault_env_rebuilds += 1
             self.weight_tables = None
             self._acc_batch_tables = None
+            if self._fault_backend == "tables":
+                self._fault_backend = "generic"
             # staged state encodes the old rates too: drop the unit
             # executables, the fused-segment executables and the
             # activation store (row cache is shared with _engine and
@@ -504,7 +755,10 @@ class InferenceAccuracyEvaluator:
         activation-store cap carved out up front.
 
         The probe targets the executable that will actually dispatch:
-        the weight-table path when tables exist (its per-row footprint
+        the pallas path under ``fault_backend="pallas"`` (whose budget
+        excludes the O(params × devices) table variants entirely — the
+        reclaimed memory shows up here as larger auto chunks), the
+        weight-table path when tables exist (its per-row footprint
         includes the gathered per-unit weights, which the generic path
         shares as vmap constants), else the generic path.  The staged
         engine's per-unit dispatches touch strictly less than one full
@@ -526,7 +780,14 @@ class InferenceAccuracyEvaluator:
 
         def probe(n: int) -> int:
             try:
-                if self._acc_batch_tables is not None:
+                if self._fault_backend == "pallas":
+                    D = len(self.w_rates_by_device)
+                    zd = jnp.zeros((D,), jnp.float32)
+                    compiled = self._ensure_pallas_batch().lower(
+                        jnp.zeros((n, L), jnp.int32), zd, zd,
+                        jnp.int32(self.base_seed)).compile()
+                elif self._fault_backend == "tables" \
+                        and self._acc_batch_tables is not None:
                     compiled = self._acc_batch_tables.lower(
                         jnp.zeros((n, L), jnp.int32),
                         jnp.int32(self.base_seed)).compile()
@@ -559,7 +820,14 @@ class InferenceAccuracyEvaluator:
         device."""
         seed = jnp.int32(self.base_seed)
         put = DeviceScheduler.put
-        if self._acc_batch_tables is not None:
+        if self._fault_backend == "pallas":
+            return self._ensure_pallas_batch()(
+                put(np.asarray(rows, np.int32), device),
+                put(np.asarray(self.w_rates_by_device, np.float32), device),
+                put(np.asarray(self.a_rates_by_device, np.float32), device),
+                seed)
+        if self._fault_backend == "tables" \
+                and self._acc_batch_tables is not None:
             return self._acc_batch_tables(
                 put(np.asarray(rows, np.int32), device), seed)
         WR = put(np.asarray(self.w_rates_by_device[rows], np.float32), device)
@@ -628,6 +896,7 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
                                max_store_bytes: int | None = 256 << 20,
                                devices: int | str | None = "auto",
                                fuse_chains: bool = True,
+                               fault_backend: str | None = "auto",
                                ) -> InferenceAccuracyEvaluator:
     """Staged-capable ΔAcc evaluator for any ``configs.ArchConfig`` LM.
 
@@ -654,6 +923,13 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
       eval_strategy: "auto" resolves to "staged" (the step API is
         always available here); "full" selects the whole-forward path
         — bit-identical, cost only (tests/test_transformer_staged.py).
+      fault_backend: ``"generic"`` (the historical LM path — "auto"
+        resolves here), ``"pallas"`` (builds
+        ``LMStepModel.quant_unit_params``: one resident int8 copy,
+        flips inside the contraction, hot-swap-free rate changes) or
+        ``"tables"`` (builds ``LMStepModel.build_weight_fault_tables``:
+        O(L × D) pre-corrupted variants gathered per gene).  All
+        value-identical; see InferenceAccuracyEvaluator.
 
     ``spec.bits``/``spec.faulty_bits`` pin the fixed-point fault width
     of the corruption (the paper's INT8-class ``bits=8`` regime is
@@ -671,12 +947,26 @@ def make_lm_accuracy_evaluator(cfg, params, batch, labels,
     """
     from repro.models.transformer import LMStepModel
     sm = LMStepModel(cfg, bits=spec.bits, faulty_bits=spec.faulty_bits,
-                     batch=batch if cfg.is_encdec else None)
+                     batch=batch if cfg.is_encdec else None,
+                     fault_model=spec.fault_model, mbu_width=spec.mbu_width)
     shared = {"mem": cfg.n_enc_layers - 1} if cfg.is_encdec else None
+    units = sm.unit_params(params)
+    if fault_backend in (None, "auto"):
+        fault_backend = "generic"    # no LM tables unless asked for
+    quant_params = tables = None
+    if fault_backend == "pallas":
+        quant_params = sm.quant_unit_params(params)
+    elif fault_backend == "tables":
+        tables = sm.build_weight_fault_tables(
+            units, spec.weight_fault_rate * np.asarray(device_fault_scale,
+                                                       np.float32),
+            base_seed=base_seed)
     return InferenceAccuracyEvaluator(
-        sm.apply, sm.unit_params(params), batch, labels, spec,
+        sm.apply, units, batch, labels, spec,
         device_fault_scale, base_seed=base_seed,
-        eval_batch_size=eval_batch_size, step_fn=sm.step,
+        eval_batch_size=eval_batch_size, weight_tables=tables,
+        quant_params=quant_params, fault_backend=fault_backend,
+        step_fn=sm.step,
         eval_strategy=eval_strategy, n_units=sm.n_units,
         max_store_bytes=max_store_bytes, devices=devices,
         shared_carry_fields=shared, fuse_chains=fuse_chains)
@@ -731,9 +1021,11 @@ class ObjectiveFn:
     ``"staged"`` / ``"full"`` select the ΔAcc execution path on
     evaluators that support it (see InferenceAccuracyEvaluator),
     ``fuse_chains`` (True/False) toggles the staged path's chain-fused
-    dispatch, and ``devices`` (``"auto"`` or a count) selects how many
-    local devices the ΔAcc dispatches shard over — placement and
-    fusion never change results.
+    dispatch, ``fault_backend`` (``"generic"`` / ``"tables"`` /
+    ``"pallas"`` / ``"auto"``) selects the fault-injection path, and
+    ``devices`` (``"auto"`` or a count) selects how many local devices
+    the ΔAcc dispatches shard over — placement, fusion and backend
+    never change results.
     """
 
     cost_model: CostModel
@@ -744,11 +1036,12 @@ class ObjectiveFn:
     eval_strategy: str | None = None
     devices: int | str | None = None
     fuse_chains: bool | None = None
+    fault_backend: str | None = None
 
     def __post_init__(self):
         # devices first (eval_batch_size="auto" budgets per device),
-        # then strategy (staged reserves the activation store), then
-        # the chunk size that depends on both
+        # then strategy (staged reserves the activation store) and the
+        # injection path, then the chunk size that depends on all three
         if (self.devices is not None
                 and hasattr(self.acc_evaluator, "devices")):
             self.acc_evaluator.devices = self.devices
@@ -758,6 +1051,9 @@ class ObjectiveFn:
         if (self.fuse_chains is not None
                 and hasattr(self.acc_evaluator, "fuse_chains")):
             self.acc_evaluator.fuse_chains = self.fuse_chains
+        if (self.fault_backend is not None
+                and hasattr(self.acc_evaluator, "fault_backend")):
+            self.acc_evaluator.fault_backend = self.fault_backend
         if (self.eval_batch_size is not None
                 and hasattr(self.acc_evaluator, "eval_batch_size")):
             self.acc_evaluator.eval_batch_size = self.eval_batch_size

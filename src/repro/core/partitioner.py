@@ -84,7 +84,8 @@ class _BasePartitioner:
                  eval_batch_size: int | str | None = None,
                  eval_strategy: str | None = None,
                  eval_devices: int | str | None = None,
-                 fuse_chains: bool | None = None):
+                 fuse_chains: bool | None = None,
+                 fault_backend: str | None = None):
         self.layers = layers
         self.devices = devices
         self.fault_spec = fault_spec
@@ -96,6 +97,8 @@ class _BasePartitioner:
         # (memory knob, "auto" probes the compiled footprint),
         # eval_strategy selects staged prefix-reuse vs full forward,
         # fuse_chains toggles the staged path's chain-fused dispatch,
+        # fault_backend selects the ΔAcc injection path (generic /
+        # tables / pallas — see core/objectives.py "Fault backends"),
         # and eval_devices shards ΔAcc dispatches over local devices
         # (named eval_* because `devices` here is the PARTITIONING
         # target ladder); none of them ever changes results — see
@@ -108,7 +111,8 @@ class _BasePartitioner:
             eval_batch_size=eval_batch_size,
             eval_strategy=eval_strategy,
             devices=eval_devices,
-            fuse_chains=fuse_chains)
+            fuse_chains=fuse_chains,
+            fault_backend=fault_backend)
 
     uses_accuracy = False
 
@@ -203,7 +207,8 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
                    eval_batch_size: int | str | None = None,
                    eval_strategy: str | None = None,
                    eval_devices: int | str | None = None,
-                   fuse_chains: bool | None = None) -> AFarePart:
+                   fuse_chains: bool | None = None,
+                   fault_backend: str | None = None) -> AFarePart:
     """:class:`AFarePart` over an LM config's layer graph — one call,
     no CNN/LM split.
 
@@ -230,4 +235,4 @@ def lm_partitioner(cfg, acc_evaluator=None, *,
                      acc_evaluator=acc_evaluator, nsga2_config=nsga2_config,
                      batch=batch, eval_batch_size=eval_batch_size,
                      eval_strategy=eval_strategy, eval_devices=eval_devices,
-                     fuse_chains=fuse_chains)
+                     fuse_chains=fuse_chains, fault_backend=fault_backend)

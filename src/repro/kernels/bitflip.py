@@ -24,30 +24,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import M1, M2, GOLDEN, INV24  # shared hash constants
+from repro.kernels.faultmodel import (M1, M2, GOLDEN, INV24,  # noqa: F401
+                                      apply_fault, lowbias32, uniform01)
 
 LANES = 128          # TPU vector lane count
 DEFAULT_BLOCK_ROWS = 512
 
-
-def _mix(x):
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(M1)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(M2)
-    x = x ^ (x >> 16)
-    return x
-
-
-def _uniform(idx, seed, plane: int):
-    """Uniform [0,1) float32 with 24-bit resolution; matches ref.uniform01."""
-    h = _mix(idx + jnp.uint32(plane * GOLDEN & 0xFFFFFFFF))
-    u = _mix(h ^ seed)
-    return (u >> 8).astype(jnp.float32) * INV24
+# Back-compat aliases: the hash now lives in faultmodel.py (plain-int
+# constants only, so Pallas kernel bodies can call it directly).
+_mix = lowbias32
+_uniform = uniform01
 
 
 def _bitflip_kernel(seed_ref, rate_ref, q_ref, o_ref, *, faulty_bits: int,
-                    block_rows: int, total_cols: int):
+                    block_rows: int, total_cols: int, fault_model: str,
+                    mbu_width: int):
     q = q_ref[...]
     seed = seed_ref[0, 0].astype(jnp.uint32)
     rate = rate_ref[0, 0]
@@ -55,20 +46,18 @@ def _bitflip_kernel(seed_ref, rate_ref, q_ref, o_ref, *, faulty_bits: int,
     rows = jax.lax.broadcasted_iota(jnp.uint32, q.shape, 0) + jnp.uint32(base_row)
     cols = jax.lax.broadcasted_iota(jnp.uint32, q.shape, 1)
     idx = rows * jnp.uint32(total_cols) + cols  # flat element index
-    mask = jnp.zeros(q.shape, dtype=q.dtype)
-    for i in range(faulty_bits):  # static unroll
-        u = _uniform(idx, seed, i)
-        mask = mask | jnp.where(u < rate, jnp.array(1 << i, q.dtype),
-                                jnp.array(0, q.dtype))
-    o_ref[...] = q ^ mask
+    o_ref[...] = apply_fault(q, idx, seed, rate, faulty_bits,
+                             fault_model=fault_model, mbu_width=mbu_width)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("faulty_bits", "block_rows", "interpret"))
+    static_argnames=("faulty_bits", "block_rows", "interpret",
+                     "fault_model", "mbu_width"))
 def bitflip_pallas(q: jax.Array, seed: jax.Array, fault_rate,
                    faulty_bits: int, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True, fault_model: str = "flip",
+                   mbu_width: int = 2) -> jax.Array:
     """Bit-flip fault injection on an integer tensor of any shape.
 
     Args:
@@ -78,6 +67,9 @@ def bitflip_pallas(q: jax.Array, seed: jax.Array, fault_rate,
       faulty_bits: number of vulnerable LSBs, b (static).
       interpret: run in interpreter mode (CPU validation); on real TPU
         pass False.
+      fault_model: "flip" (default), "stuck0", "stuck1" or "mbu" — see
+        ``faultmodel.py``.
+      mbu_width: burst width for the "mbu" model (static).
     """
     assert jnp.issubdtype(q.dtype, jnp.integer), q.dtype
     if faulty_bits <= 0:
@@ -98,7 +90,8 @@ def bitflip_pallas(q: jax.Array, seed: jax.Array, fault_rate,
     out = pl.pallas_call(
         functools.partial(
             _bitflip_kernel, faulty_bits=faulty_bits,
-            block_rows=block_rows, total_cols=LANES),
+            block_rows=block_rows, total_cols=LANES,
+            fault_model=fault_model, mbu_width=mbu_width),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0)),          # seed

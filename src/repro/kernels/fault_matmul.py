@@ -19,12 +19,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.bitflip import _uniform
+from repro.kernels.faultmodel import apply_fault
 
 
 def _fault_matmul_kernel(scale_ref, seed_ref, rate_ref, x_ref, w_ref, o_ref,
                          acc_ref, *, faulty_bits: int, bk: int, bn: int,
-                         n_total: int, k_steps: int):
+                         n_total: int, k_steps: int, fault_model: str,
+                         mbu_width: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -41,11 +42,9 @@ def _fault_matmul_kernel(scale_ref, seed_ref, rate_ref, x_ref, w_ref, o_ref,
     rows = jax.lax.broadcasted_iota(jnp.uint32, qw.shape, 0) + jnp.uint32(base_k)
     cols = jax.lax.broadcasted_iota(jnp.uint32, qw.shape, 1) + jnp.uint32(base_n)
     idx = rows * jnp.uint32(n_total) + cols
-    mask = jnp.zeros(qw.shape, dtype=jnp.int32)
-    for i in range(faulty_bits):
-        u = _uniform(idx, seed, i)
-        mask = mask | jnp.where(u < rate, 1 << i, 0)
-    w = ((qw ^ mask).astype(jnp.float32)) * scale_ref[0, 0]
+    qf = apply_fault(qw, idx, seed, rate, faulty_bits,
+                     fault_model=fault_model, mbu_width=mbu_width)
+    w = qf.astype(jnp.float32) * scale_ref[0, 0]
 
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
@@ -57,18 +56,28 @@ def _fault_matmul_kernel(scale_ref, seed_ref, rate_ref, x_ref, w_ref, o_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("faulty_bits", "bm", "bk", "bn", "interpret"))
+    static_argnames=("faulty_bits", "bm", "bk", "bn", "interpret",
+                     "fault_model", "mbu_width"))
 def fault_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
                         seed: jax.Array, fault_rate, faulty_bits: int, *,
                         bm: int = 256, bk: int = 512, bn: int = 256,
-                        interpret: bool = True) -> jax.Array:
-    """x: (M, K) float; qw: (K, N) int (quantized weights); scale: scalar.
+                        interpret: bool = True, fault_model: str = "flip",
+                        mbu_width: int = 2) -> jax.Array:
+    """x: (..., K) float; qw: (K, N) int (quantized weights); scale: scalar.
 
-    Returns (M, N) in x.dtype with fp32 accumulation.  Shapes are padded
-    to block multiples; padded weight rows multiply padded x columns of
-    zeros, so results are exact.
+    Returns (..., N) in x.dtype with fp32 accumulation.  Leading x dims
+    are flattened into M for the kernel and restored afterwards.  Any
+    (M, K, N) is accepted: shapes are padded to block multiples; padded
+    weight rows multiply padded x columns of zeros, so results are exact.
     """
-    assert x.ndim == 2 and qw.ndim == 2 and x.shape[1] == qw.shape[0]
+    if qw.ndim != 2:
+        raise ValueError(f"qw must be 2-D (K, N), got shape {qw.shape}")
+    if x.shape[-1] != qw.shape[0]:
+        raise ValueError(
+            f"contraction mismatch: x {x.shape} @ qw {qw.shape}")
+    lead = x.shape[:-1]
+    if x.ndim != 2:
+        x = x.reshape(-1, x.shape[-1])
     m, k = x.shape
     _, n = qw.shape
     bm = min(bm, max(8, m))
@@ -91,7 +100,7 @@ def fault_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
         functools.partial(
             _fault_matmul_kernel,
             faulty_bits=max(0, faulty_bits), bk=bk, bn=bn, n_total=n,
-            k_steps=grid[2]),
+            k_steps=grid[2], fault_model=fault_model, mbu_width=mbu_width),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),   # scale
@@ -107,4 +116,4 @@ def fault_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array,
     )(scale.reshape(1, 1).astype(jnp.float32),
       jnp.asarray(seed, jnp.int32).reshape(1, 1),
       jnp.asarray(fault_rate, jnp.float32).reshape(1, 1), xp, wp)
-    return out[:m, :n]
+    return out[:m, :n].reshape(*lead, n)

@@ -1,12 +1,24 @@
 """Public jit'd entry points for the fault-injection kernels.
 
-``INTERPRET`` defaults to True because this container is CPU-only; on a
-real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
-REPRO_PALLAS_INTERPRET env var) and the same code lowers to Mosaic.
+``INTERPRET`` is auto-detected: when the process has no TPU backend
+(``jax.default_backend() != "tpu"``, e.g. CPU-only CI) the kernels run
+in Pallas interpret mode; on a real TPU they lower to Mosaic.  The
+``REPRO_PALLAS_INTERPRET`` env var still overrides in either direction
+("0" forces compiled, anything else forces interpret).
 
 Fault rates are traced scalars: one executable per (shape, faulty_bits)
 serves every rate the optimizer asks for.  Every op has a ``*_ref``
 oracle in ``ref.py``; tests sweep shapes/dtypes asserting exact equality.
+
+``fault_matmul`` is the evaluator's in-tile lowering (DESIGN.md "Fault
+backends").  On TPU it is the fused ``fault_matmul_pallas`` kernel —
+bits flip on the VMEM weight tile right before the MXU, zero extra HBM
+traffic.  In interpret mode there is no real tile to fuse into, so it
+runs the exact composition instead: the element-wise ``bitflip`` kernel
+(bit-identical to ``bitflip_ref``) -> dequantize -> the *same* ``x @ w``
+contraction the generic evaluator path uses.  That makes the
+``pallas == tables == generic`` backend pin bitwise on CPU CI, while the
+TPU path keeps the fused kernel under its tolerance tests.
 """
 from __future__ import annotations
 
@@ -21,35 +33,55 @@ from repro.kernels.fault_matmul import fault_matmul_pallas
 from repro.kernels.quant_bitflip import quant_bitflip_pallas
 from repro.quant.fixedpoint import QuantSpec
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_env = os.environ.get("REPRO_PALLAS_INTERPRET")
+INTERPRET = (_env != "0") if _env is not None else (
+    jax.default_backend() != "tpu")
 
 __all__ = ["bitflip", "quant_bitflip", "fault_matmul", "INTERPRET"]
 
 
-def bitflip(q: jax.Array, seed, fault_rate, faulty_bits: int) -> jax.Array:
-    """Alg. 2: flip each of the `faulty_bits` LSBs with prob `fault_rate`."""
+def bitflip(q: jax.Array, seed, fault_rate, faulty_bits: int, *,
+            fault_model: str = "flip", mbu_width: int = 2) -> jax.Array:
+    """Alg. 2: corrupt the `faulty_bits` LSBs with prob `fault_rate`
+    under the chosen fault model (flip / stuck0 / stuck1 / mbu)."""
     if isinstance(fault_rate, (int, float)) and fault_rate <= 0.0:
         return q
     return bitflip_pallas(q, jnp.asarray(seed, jnp.int32),
                           jnp.asarray(fault_rate, jnp.float32),
-                          faulty_bits, interpret=INTERPRET)
+                          faulty_bits, interpret=INTERPRET,
+                          fault_model=fault_model, mbu_width=mbu_width)
 
 
 def quant_bitflip(x: jax.Array, seed, fault_rate, faulty_bits: int,
-                  spec: QuantSpec = QuantSpec()) -> jax.Array:
-    """Fused quantize -> flip -> dequantize on a float tensor."""
+                  spec: QuantSpec = QuantSpec(), *,
+                  fault_model: str = "flip", mbu_width: int = 2) -> jax.Array:
+    """Fused quantize -> corrupt -> dequantize on a float tensor."""
     return quant_bitflip_pallas(x, jnp.asarray(seed, jnp.int32),
                                 jnp.asarray(fault_rate, jnp.float32),
-                                faulty_bits, spec, interpret=INTERPRET)
+                                faulty_bits, spec, interpret=INTERPRET,
+                                fault_model=fault_model, mbu_width=mbu_width)
 
 
 def fault_matmul(x: jax.Array, qw: jax.Array, scale, seed, fault_rate,
-                 faulty_bits: int) -> jax.Array:
-    """x @ dequant(bitflip(qw)) with zero extra HBM traffic."""
+                 faulty_bits: int, *, fault_model: str = "flip",
+                 mbu_width: int = 2, out_dtype=None) -> jax.Array:
+    """x @ dequant(corrupt(qw)) with zero extra HBM traffic.
+
+    ``out_dtype`` selects the dtype the dequantized weight is cast to
+    before the contraction (the original weight dtype); defaults to
+    ``x.dtype``.  See the module docstring for the interpret-mode
+    dispatch.
+    """
+    if INTERPRET:
+        qf = bitflip(qw, seed, fault_rate, faulty_bits,
+                     fault_model=fault_model, mbu_width=mbu_width)
+        w = qf.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+        return x @ w.astype(out_dtype or x.dtype)
     return fault_matmul_pallas(x, qw, jnp.asarray(scale, jnp.float32),
                                jnp.asarray(seed, jnp.int32),
                                jnp.asarray(fault_rate, jnp.float32),
-                               faulty_bits, interpret=INTERPRET)
+                               faulty_bits, interpret=False,
+                               fault_model=fault_model, mbu_width=mbu_width)
 
 
 # Re-export oracles for tests/benchmarks.

@@ -19,13 +19,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitflip import LANES, DEFAULT_BLOCK_ROWS, _uniform
+from repro.kernels.bitflip import LANES, DEFAULT_BLOCK_ROWS
+from repro.kernels.faultmodel import apply_fault
 from repro.quant.fixedpoint import QuantSpec, compute_scale
 
 
 def _quant_bitflip_kernel(scale_ref, seed_ref, rate_ref, x_ref, o_ref, *,
                           faulty_bits: int, block_rows: int, qmin: int,
-                          qmax: int, out_dtype):
+                          qmax: int, out_dtype, fault_model: str,
+                          mbu_width: int):
     x = x_ref[...].astype(jnp.float32)
     scale = scale_ref[0, 0]
     seed = seed_ref[0, 0].astype(jnp.uint32)
@@ -36,21 +38,20 @@ def _quant_bitflip_kernel(scale_ref, seed_ref, rate_ref, x_ref, o_ref, *,
     rows = jax.lax.broadcasted_iota(jnp.uint32, q.shape, 0) + jnp.uint32(base_row)
     cols = jax.lax.broadcasted_iota(jnp.uint32, q.shape, 1)
     idx = rows * jnp.uint32(LANES) + cols
-    mask = jnp.zeros(q.shape, dtype=jnp.int32)
-    for i in range(faulty_bits):
-        u = _uniform(idx, seed, i)
-        mask = mask | jnp.where(u < rate, 1 << i, 0)
-    q = q ^ mask
+    q = apply_fault(q, idx, seed, rate, faulty_bits,
+                    fault_model=fault_model, mbu_width=mbu_width)
     o_ref[...] = (q.astype(jnp.float32) * scale).astype(out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("faulty_bits", "spec", "block_rows", "interpret"))
+    static_argnames=("faulty_bits", "spec", "block_rows", "interpret",
+                     "fault_model", "mbu_width"))
 def quant_bitflip_pallas(x: jax.Array, seed: jax.Array, fault_rate,
                          faulty_bits: int, spec: QuantSpec = QuantSpec(), *,
                          block_rows: int = DEFAULT_BLOCK_ROWS,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True, fault_model: str = "flip",
+                         mbu_width: int = 2) -> jax.Array:
     """Float tensor -> fault-corrupted float tensor (fused, one HBM pass).
 
     With fault_rate == 0 this degenerates to fake quantization — the
@@ -73,7 +74,8 @@ def quant_bitflip_pallas(x: jax.Array, seed: jax.Array, fault_rate,
         functools.partial(
             _quant_bitflip_kernel,
             faulty_bits=max(faulty_bits, 1), block_rows=block_rows,
-            qmin=spec.qmin, qmax=spec.qmax, out_dtype=orig_dtype),
+            qmin=spec.qmin, qmax=spec.qmax, out_dtype=orig_dtype,
+            fault_model=fault_model, mbu_width=mbu_width),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i: (0, 0)),   # scale

@@ -2,8 +2,9 @@
 
 The PRNG is a counter-based hash ("lowbias32" xorshift-multiply mixer)
 over (seed, flat element index, bit plane).  Both the oracle and the
-Pallas kernels compute the *same* hash, so kernel-vs-ref tests are exact
-(bit-identical), not just statistical.
+Pallas kernels compute the *same* hash — via the shared helpers in
+``faultmodel.py`` — so kernel-vs-ref tests are exact (bit-identical),
+not just statistical.
 
 Fault rates are TRACED values: the uniform draw is compared as a 24-bit
 float in [0, 1), so a single compiled executable evaluates any fault
@@ -13,6 +14,11 @@ recompilation.
 Element index convention: the linear index of the element in the
 C-order-flattened tensor.  Kernels operate on a padded 2D view but
 compute the same flat index, so padding never changes results.
+
+Fault models beyond the paper's independent LSB flips (stuck-at-0/1,
+multi-bit-upset bursts) are documented in ``faultmodel.py``; every
+oracle takes ``fault_model``/``mbu_width`` and defaults to ``"flip"``,
+bit-identical to the historical behaviour.
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.faultmodel import (M1, M2, GOLDEN, INV24,  # noqa: F401
+                                      apply_fault, lowbias32, uniform01)
 from repro.quant.fixedpoint import QuantSpec, compute_scale
 
 __all__ = [
@@ -31,71 +39,49 @@ __all__ = [
     "fault_matmul_ref",
 ]
 
-# Plain ints so Pallas kernels can embed them as literals (closure-captured
-# jnp arrays are rejected by pallas_call).
-M1 = 0x7FEB352D
-M2 = 0x846CA68B
-GOLDEN = 0x9E3779B9
-INV24 = float(2.0 ** -24)
 
-
-def lowbias32(x: jax.Array) -> jax.Array:
-    """Bias-minimal 32-bit integer mixer (T. Ettinger's lowbias32)."""
-    x = x.astype(jnp.uint32)
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(M1)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(M2)
-    x = x ^ (x >> 16)
-    return x
-
-
-def uniform01(idx: jax.Array, seed: jax.Array, plane: int) -> jax.Array:
-    """Uniform float32 in [0,1) with 24-bit resolution for
-    (element idx, seed, bit plane).  idx is uint32."""
-    h = lowbias32(idx + jnp.uint32(plane * GOLDEN & 0xFFFFFFFF))
-    u = lowbias32(h ^ seed.astype(jnp.uint32))
-    return (u >> 8).astype(jnp.float32) * INV24
-
-
-@partial(jax.jit, static_argnames=("faulty_bits",))
+@partial(jax.jit, static_argnames=("faulty_bits", "fault_model", "mbu_width"))
 def bitflip_ref(q: jax.Array, seed: jax.Array, fault_rate,
-                faulty_bits: int) -> jax.Array:
-    """Paper Alg. 2: independently flip each of the `faulty_bits` LSBs of
-    every element of integer tensor `q` with probability `fault_rate`.
-    `fault_rate` may be a traced scalar."""
+                faulty_bits: int, fault_model: str = "flip",
+                mbu_width: int = 2) -> jax.Array:
+    """Paper Alg. 2 (and the extended stuck-at / MBU models): corrupt the
+    `faulty_bits` LSBs of every element of integer tensor `q` with
+    per-element probability `fault_rate`.  `fault_rate` may be a traced
+    scalar."""
     assert jnp.issubdtype(q.dtype, jnp.integer), q.dtype
     if faulty_bits <= 0:
         return q
     rate = jnp.asarray(fault_rate, jnp.float32)
     idx = jnp.arange(q.size, dtype=jnp.uint32).reshape(q.shape)
-    mask = jnp.zeros(q.shape, dtype=q.dtype)
-    for i in range(faulty_bits):
-        u = uniform01(idx, seed, i)
-        mask = mask | jnp.where(u < rate, jnp.array(1 << i, q.dtype),
-                                jnp.array(0, q.dtype))
-    return q ^ mask
+    return apply_fault(q, idx, seed, rate, faulty_bits,
+                       fault_model=fault_model, mbu_width=mbu_width)
 
 
-@partial(jax.jit, static_argnames=("faulty_bits", "spec"))
+@partial(jax.jit,
+         static_argnames=("faulty_bits", "spec", "fault_model", "mbu_width"))
 def quant_bitflip_ref(x: jax.Array, seed: jax.Array, fault_rate,
-                      faulty_bits: int, spec: QuantSpec = QuantSpec()) -> jax.Array:
-    """Fused oracle: quantize -> LSB bit-flip -> dequantize, returning the
-    *float* tensor as seen by the forward pass under faults."""
+                      faulty_bits: int, spec: QuantSpec = QuantSpec(),
+                      fault_model: str = "flip",
+                      mbu_width: int = 2) -> jax.Array:
+    """Fused oracle: quantize -> LSB corruption -> dequantize, returning
+    the *float* tensor as seen by the forward pass under faults."""
     scale = compute_scale(x, spec)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), spec.qmin, spec.qmax)
     q = q.astype(jnp.int32)
-    q = bitflip_ref(q, seed, fault_rate, faulty_bits)
+    q = bitflip_ref(q, seed, fault_rate, faulty_bits,
+                    fault_model=fault_model, mbu_width=mbu_width)
     return (q.astype(jnp.float32) * scale).astype(x.dtype)
 
 
-@partial(jax.jit, static_argnames=("faulty_bits",))
+@partial(jax.jit, static_argnames=("faulty_bits", "fault_model", "mbu_width"))
 def fault_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array,
                      seed: jax.Array, fault_rate,
-                     faulty_bits: int) -> jax.Array:
+                     faulty_bits: int, fault_model: str = "flip",
+                     mbu_width: int = 2) -> jax.Array:
     """Oracle for the fused fault-injected matmul: corrupt the quantized
     weights, dequantize, then x @ w_faulty in fp32 accumulation."""
-    qf = bitflip_ref(qw, seed, fault_rate, faulty_bits)
+    qf = bitflip_ref(qw, seed, fault_rate, faulty_bits,
+                     fault_model=fault_model, mbu_width=mbu_width)
     w = qf.astype(jnp.float32) * scale
     return jnp.dot(x.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32).astype(x.dtype)

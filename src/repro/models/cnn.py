@@ -38,7 +38,8 @@ import numpy as np
 import dataclasses
 
 from repro.core.costmodel import LayerInfo
-from repro.models.layers import maybe_corrupt
+from repro.models.layers import (dequantize_params, fault_dense,
+                                 maybe_corrupt, quantize_leaf)
 
 
 def _with_prior(infos):
@@ -103,12 +104,24 @@ def _corrupt_unit(p, x, wr, ar, seed):
     skipped when ``wr`` is None (e.g. weights were pre-corrupted via
     :func:`build_weight_fault_tables`), activation corruption when
     ``ar`` is None.  Both None => fault machinery absent from the jaxpr.
+
+    Each ndim>1 weight leaf gets its own seed, strided by flatten index
+    (``seed + 977*i``, the ``layers.corrupt_params`` convention) so
+    distinct tensors in one unit — e.g. a fire module's squeeze and
+    expand kernels — draw independent flip masks.  The index enumerates
+    ALL flattened leaves, so quantized-resident trees (``QTensor`` at
+    the same flatten position) derive identical per-leaf seeds.  The
+    977 stride never collides with the activation seed (``seed + 1``).
     """
     if wr is not None:
-        p = jax.tree.map(
-            lambda w: maybe_corrupt(w, wr, seed, bits=FAULT_BITS,
-                                    faulty_bits=FAULTY_BITS)
-            if w.ndim > 1 else w, p)
+        leaves, treedef = jax.tree.flatten(p)
+        leaves = [maybe_corrupt(w, wr, seed + 977 * i, bits=FAULT_BITS,
+                                faulty_bits=FAULTY_BITS)
+                  if w.ndim > 1 else w
+                  for i, w in enumerate(leaves)]
+        p = jax.tree.unflatten(treedef, leaves)
+    else:
+        p = dequantize_params(p)    # no-op for plain float trees
     if ar is not None:
         x = maybe_corrupt(x, ar, seed + 1, bits=FAULT_BITS,
                           faulty_bits=FAULTY_BITS)
@@ -144,7 +157,9 @@ def build_weight_fault_tables(params, w_rates_by_device, base_seed: int = 0):
     ``[D, ...]``; index leaf[d] to get the unit's weights as corrupted
     on device d.  Uncorrupted leaves (biases) are replicated.  Matches
     ``_corrupt_unit`` exactly: ndim>1 leaves only, unit seed
-    ``base_seed + 7919 * i``.
+    ``base_seed + 7919 * i`` strided per leaf by ``977 * j`` over the
+    flatten index (lockstep with ``_corrupt_unit`` so tables==generic
+    stays bitwise).
     """
     rates = [jnp.float32(r) for r in np.asarray(w_rates_by_device)]
 
@@ -152,15 +167,29 @@ def build_weight_fault_tables(params, w_rates_by_device, base_seed: int = 0):
     def _build():
         tables = []
         for i, unit in enumerate(params):
-            variants = [jax.tree.map(
-                lambda w: maybe_corrupt(w, r, base_seed + 7919 * i,
-                                        bits=FAULT_BITS,
-                                        faulty_bits=FAULTY_BITS)
-                if w.ndim > 1 else w, unit) for r in rates]
+            leaves, treedef = jax.tree.flatten(unit)
+            variants = [jax.tree.unflatten(treedef, [
+                maybe_corrupt(w, r, base_seed + 7919 * i + 977 * j,
+                              bits=FAULT_BITS, faulty_bits=FAULTY_BITS)
+                if w.ndim > 1 else w
+                for j, w in enumerate(leaves)]) for r in rates]
             tables.append(jax.tree.map(lambda *vs: jnp.stack(vs), *variants))
         return tables
 
     return jax.block_until_ready(_build())
+
+
+def quantize_unit_params(params, bits: int = FAULT_BITS):
+    """Quantize every corruptible (ndim>1) weight leaf into residence
+    for the ``pallas`` fault backend: one int8 copy of the params, no
+    per-device tables.  2-D leaves (the fc weights) are the plain dense
+    contractions ``step`` routes through ``layers.fault_dense``, so they
+    are matmul-marked and their bit flips happen inside the matmul tile;
+    conv kernels corrupt in-register at the leaf.  Biases (ndim<=1) are
+    never corrupted by ``_corrupt_unit`` and stay raw floats."""
+    return [jax.tree.map(
+        lambda w: quantize_leaf(w, bits, matmul=(w.ndim == 2))
+        if w.ndim > 1 else w, unit) for unit in params]
 
 
 class _StepModel:
@@ -243,7 +272,7 @@ class AlexNet(_StepModel):
             if i == 4:               # conv->fc boundary: flatten
                 x = x.reshape(x.shape[0], -1)
             return x
-        x = x @ p["w"] + p["b"]
+        x = fault_dense(x, p["w"]) + p["b"]
         return jax.nn.relu(x) if i < 7 else x
 
     @staticmethod
@@ -382,7 +411,7 @@ class ResNet18(_StepModel):
         if i == 0:
             return jax.nn.relu(_conv(fp["conv"], x))
         if i == 9:
-            return x @ fp["w"] + fp["b"]
+            return fault_dense(x, fp["w"]) + fp["b"]
         stage, blk = (i - 1) // 2, (i - 1) % 2
         stride = 2 if (stage > 0 and blk == 0) else 1
         h = jax.nn.relu(_conv(fp["c1"], x, stride=stride))

@@ -11,6 +11,7 @@ prefill never materialises an S x S score matrix.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -85,34 +86,195 @@ def set_fault_bits(bits: int = 16, faulty_bits: int = 4):
     FAULT_LSBS = faulty_bits
 
 
-def maybe_corrupt(x: jax.Array, rate, seed, bits: int | None = None,
-                  faulty_bits: int | None = None) -> jax.Array:
-    """Quantize->bitflip->dequantize when rate is not None (traced ok).
+# Fault model selected at trace time (like FAULT_BITS): "flip" is the
+# paper's independent LSB flips; "stuck0"/"stuck1"/"mbu" are the extended
+# models the in-register backend affords (see kernels/faultmodel.py).
+FAULT_MODEL = "flip"
+MBU_WIDTH = 2
+
+
+def set_fault_model(fault_model: str = "flip", mbu_width: int = 2):
+    from repro.kernels.faultmodel import FAULT_MODELS
+    global FAULT_MODEL, MBU_WIDTH
+    assert fault_model in FAULT_MODELS, fault_model
+    FAULT_MODEL = fault_model
+    MBU_WIDTH = mbu_width
+
+
+# --------------------------------------------------------------------------
+# Quantized-resident weights (the "pallas" fault backend).
+#
+# ``QTensor`` holds a weight leaf pre-quantized once at model-build time
+# (int8 storage + per-tensor scale).  It is deliberately NOT a pytree
+# node: jax.tree.map treats it as a leaf, so it occupies exactly the
+# flatten position of the float leaf it replaces — per-leaf fault seeds
+# (seed + 977*i) are identical to the generic path's by construction.
+# Corrupting a QTensor runs the element-wise Pallas ``bitflip`` kernel on
+# the stored integers and dequantizes in-register; since (a) the stored
+# (q, scale) equal what ``quant_bitflip_ref`` computes on the fly from
+# the float leaf and (b) the kernel is bit-exact vs ``bitflip_ref``, the
+# result is bitwise identical to the generic path — with O(params) int8
+# resident state instead of O(params x devices) corrupted float tables.
+#
+# Leaves marked ``matmul=True`` (plain dense contractions) are not
+# corrupted at the leaf: ``corrupt_params`` wraps them in a ``FaultedQ``
+# carrier and the consuming contraction site calls :func:`fault_dense`,
+# which lowers to ``kernels.ops.fault_matmul`` — on TPU the fused
+# fault-injected matmul tile (flips happen in VMEM right before the MXU,
+# corrupted weights never reach HBM); in interpret mode the bit-exact
+# composition of the same kernels (see kernels/ops.py).
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class QTensor:
+    """A weight leaf kept quantized in residence (int8 + scale)."""
+
+    qw: jax.Array                 # integer storage, original shape
+    scale: jax.Array              # per-tensor scale (float32 scalar)
+    bits: int                     # fixed-point width used to quantize
+    dtype: Any                    # original float dtype (for dequant)
+    matmul: bool = False          # consumed by a plain dense contraction?
+
+    @property
+    def shape(self):
+        return self.qw.shape
+
+    @property
+    def ndim(self):
+        return self.qw.ndim
+
+    def dequant(self) -> jax.Array:
+        return (self.qw.astype(jnp.float32) * self.scale).astype(self.dtype)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FaultedQ:
+    """A matmul-marked QTensor bundled with its fault parameters; consumed
+    by :func:`fault_dense` at the contraction site."""
+
+    qw: jax.Array
+    scale: jax.Array
+    dtype: Any
+    rate: Any                     # traced scalar
+    seed: Any
+    faulty_bits: int
+    fault_model: str = "flip"
+    mbu_width: int = 2
+
+
+def quantize_leaf(x: jax.Array, bits: int, *, matmul: bool = False) -> QTensor:
+    """Quantize one float leaf into residence.  The (q, scale) pair is
+    bitwise the pair ``quant_bitflip_ref`` derives from ``x`` on the fly
+    (same compute_scale / round / clip), so corrupt-then-dequant of the
+    stored integers reproduces the generic path exactly."""
+    from repro.quant.fixedpoint import quantize
+    q, scale = quantize(x, QuantSpec(bits=bits))
+    return QTensor(qw=q, scale=scale, bits=bits, dtype=x.dtype, matmul=matmul)
+
+
+def quantize_params(params, bits: int, matmul_pred=None):
+    """Quantize every float leaf of a param tree into :class:`QTensor`\\ s.
+
+    ``matmul_pred(path, leaf) -> bool`` marks leaves that are consumed by
+    a plain dense contraction routed through :func:`fault_dense`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            mm = bool(matmul_pred(path, leaf)) if matmul_pred else False
+            out.append(quantize_leaf(leaf, bits, matmul=mm))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def dequantize_params(params):
+    """Undo :func:`quantize_params` (fake-quantized floats back)."""
+    return jax.tree.map(
+        lambda leaf: leaf.dequant() if isinstance(leaf, QTensor) else leaf,
+        params)
+
+
+def _corrupt_qtensor(qt: QTensor, rate, seed, faulty_bits: int,
+                     fault_model: str, mbu_width: int) -> jax.Array:
+    qf = kops.bitflip(qt.qw, seed, rate, faulty_bits,
+                      fault_model=fault_model, mbu_width=mbu_width)
+    return (qf.astype(jnp.float32) * qt.scale).astype(qt.dtype)
+
+
+def fault_dense(x: jax.Array, w) -> jax.Array:
+    """Dense contraction ``x @ w`` whose weight may be fault-wrapped.
+
+    Plain arrays take the exact historical expression; a clean
+    :class:`QTensor` dequantizes first (fake-quant, rate-None contract);
+    a :class:`FaultedQ` lowers to the fused fault-injected matmul."""
+    if isinstance(w, FaultedQ):
+        return kops.fault_matmul(x, w.qw, w.scale, w.seed, w.rate,
+                                 w.faulty_bits, fault_model=w.fault_model,
+                                 mbu_width=w.mbu_width, out_dtype=w.dtype)
+    if isinstance(w, QTensor):
+        w = w.dequant()
+    return x @ w
+
+
+def maybe_corrupt(x, rate, seed, bits: int | None = None,
+                  faulty_bits: int | None = None,
+                  fault_model: str | None = None,
+                  mbu_width: int | None = None):
+    """Quantize->corrupt->dequantize when rate is not None (traced ok).
 
     ``bits``/``faulty_bits`` default to the module-level fault width
-    (see :func:`set_fault_bits`)."""
+    (see :func:`set_fault_bits`); ``fault_model``/``mbu_width`` to the
+    module-level fault model (:func:`set_fault_model`).  A
+    :class:`QTensor` input corrupts its resident integers in-register
+    (matmul-marked leaves defer to the contraction site via
+    :class:`FaultedQ`); with rate None it dequantizes — quantized
+    residence means the weight is fake-quantized by construction."""
+    faulty_bits = FAULT_LSBS if faulty_bits is None else faulty_bits
+    fault_model = FAULT_MODEL if fault_model is None else fault_model
+    mbu_width = MBU_WIDTH if mbu_width is None else mbu_width
+    if isinstance(x, QTensor):
+        if rate is None:
+            return x.dequant()
+        if x.matmul:
+            return FaultedQ(qw=x.qw, scale=x.scale, dtype=x.dtype,
+                            rate=rate, seed=seed, faulty_bits=faulty_bits,
+                            fault_model=fault_model, mbu_width=mbu_width)
+        return _corrupt_qtensor(x, rate, seed, faulty_bits,
+                                fault_model, mbu_width)
     if rate is None:
         return x
     bits = FAULT_BITS if bits is None else bits
-    faulty_bits = FAULT_LSBS if faulty_bits is None else faulty_bits
     if FAULT_IMPL == "pallas":
-        return kops.quant_bitflip(x, seed, rate, faulty_bits, QuantSpec(bits))
+        return kops.quant_bitflip(x, seed, rate, faulty_bits, QuantSpec(bits),
+                                  fault_model=fault_model,
+                                  mbu_width=mbu_width)
     return kref.quant_bitflip_ref(x, jnp.asarray(seed, jnp.int32),
                                   jnp.asarray(rate, jnp.float32),
-                                  faulty_bits, QuantSpec(bits))
+                                  faulty_bits, QuantSpec(bits),
+                                  fault_model, mbu_width)
 
 
 def corrupt_params(params, rate, seed, bits: int | None = None,
-                   faulty_bits: int | None = None):
-    """Corrupt every float leaf of a block's params (weight-fault domain)."""
+                   faulty_bits: int | None = None,
+                   fault_model: str | None = None,
+                   mbu_width: int | None = None):
+    """Corrupt every float leaf of a block's params (weight-fault domain).
+
+    Works on float trees (generic/tables backends) and quantized-resident
+    trees (``pallas`` backend) alike; QTensor leaves sit at the same
+    flatten index as the float leaves they replace, so the per-leaf seed
+    stride (977*i) matches across backends bit-for-bit."""
     if rate is None:
-        return params
+        return dequantize_params(params)
     leaves, treedef = jax.tree.flatten(params)
     out = []
     for i, leaf in enumerate(leaves):
-        if jnp.issubdtype(leaf.dtype, jnp.floating):
+        if isinstance(leaf, QTensor) or \
+                jnp.issubdtype(leaf.dtype, jnp.floating):
             out.append(maybe_corrupt(leaf, rate, seed + 977 * i,
-                                     bits=bits, faulty_bits=faulty_bits))
+                                     bits=bits, faulty_bits=faulty_bits,
+                                     fault_model=fault_model,
+                                     mbu_width=mbu_width))
         else:
             out.append(leaf)
     return jax.tree.unflatten(treedef, out)
@@ -306,11 +468,11 @@ def attention_fwd(p: Params, x: jax.Array, positions: jax.Array, *,
                   memory_pos: jax.Array | None = None) -> jax.Array:
     """Self-attention (causal) or cross-attention (memory given, non-causal)."""
     B, S, D = x.shape
-    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    q = fault_dense(x, p["wq"]).reshape(B, S, n_heads, head_dim)
     src = memory if memory is not None else x
     Sk = src.shape[1]
-    k = (src @ p["wk"]).reshape(B, Sk, n_kv, head_dim)
-    v = (src @ p["wv"]).reshape(B, Sk, n_kv, head_dim)
+    k = fault_dense(src, p["wk"]).reshape(B, Sk, n_kv, head_dim)
+    v = fault_dense(src, p["wv"]).reshape(B, Sk, n_kv, head_dim)
     if memory is None:
         q = rope(q, positions, rope_theta)
         k = rope(k, positions, rope_theta)
@@ -323,7 +485,7 @@ def attention_fwd(p: Params, x: jax.Array, positions: jax.Array, *,
     o = flash_attention(q, k, v, positions, pos_k, window=window,
                         softcap=softcap, kv_chunk=kv_chunk, causal=causal,
                         unroll=unroll, seq_axis=seq_axis)
-    return o.reshape(B, S, n_heads * head_dim) @ p["wo"]
+    return fault_dense(o.reshape(B, S, n_heads * head_dim), p["wo"])
 
 
 def attention_prefill(p: Params, x, positions, *, n_heads, n_kv, head_dim,
@@ -331,15 +493,15 @@ def attention_prefill(p: Params, x, positions, *, n_heads, n_kv, head_dim,
                       unroll: bool = False, seq_axis: str | None = None):
     """Like attention_fwd but also returns (k, v) for cache construction."""
     B, S, D = x.shape
-    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
-    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
-    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    q = fault_dense(x, p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = fault_dense(x, p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = fault_dense(x, p["wv"]).reshape(B, S, n_kv, head_dim)
     q = rope(q, positions, rope_theta)
     k = rope(k, positions, rope_theta)
     o = flash_attention(q, k, v, positions, positions, window=window,
                         softcap=softcap, kv_chunk=kv_chunk, causal=True,
                         unroll=unroll, seq_axis=seq_axis)
-    return o.reshape(B, S, n_heads * head_dim) @ p["wo"], k, v
+    return fault_dense(o.reshape(B, S, n_heads * head_dim), p["wo"]), k, v
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -405,10 +567,10 @@ def _act(x, act: str):
 
 
 def mlp_fwd(p: Params, x: jax.Array, act: str) -> jax.Array:
-    h = _act(x @ p["w1"], act)
+    h = _act(fault_dense(x, p["w1"]), act)
     if act.endswith("_glu"):
-        h = h * (x @ p["w3"])
-    return h @ p["w2"]
+        h = h * fault_dense(x, p["w3"])
+    return fault_dense(h, p["w2"])
 
 
 # --------------------------------------------------------------------------

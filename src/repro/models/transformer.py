@@ -147,19 +147,26 @@ def _rate_for(fault, lidx):
 # Block forward (full-sequence; used by train and prefill)
 # ==========================================================================
 def _block_fwd(cfg: ArchConfig, kind: str, p: Params, x, positions, *,
-               fault_rates=None, fault_bits=None, build_cache: bool = False,
+               fault_rates=None, fault_bits=None, fault_model=None,
+               build_cache: bool = False,
                kv_chunk: int = 1024, ssd_chunk: int = 256,
                unroll: bool = False, seq_axis: str | None = None):
     """Returns (x_out, cache_entry_or_None).  ``fault_bits`` is an
     optional (bits, faulty_bits) fixed-point width override for the
-    corruption; None = the module defaults in ``layers``."""
+    corruption; ``fault_model`` an optional (model, mbu_width) override;
+    None = the module defaults in ``layers``."""
     x = L._seq_wsc(x)
     wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
     bits, lsbs = fault_bits if fault_bits is not None else (None, None)
+    fm, mw = fault_model if fault_model is not None else (None, None)
     if wr is not None:
-        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs,
+                             fault_model=fm, mbu_width=mw)
+    else:
+        p = L.dequantize_params(p)      # no-op for plain float trees
     if ar is not None:
-        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs,
+                            fault_model=fm, mbu_width=mw)
     cache = None
     window = None
     softcap = cfg.logit_softcap or 0.0
@@ -231,7 +238,7 @@ def unembed(cfg: ArchConfig, params: Params, x: jax.Array):
 
 
 def _enc_block_fwd(cfg: ArchConfig, p: Params, x, positions, *,
-                   fault_rates=None, fault_bits=None):
+                   fault_rates=None, fault_bits=None, fault_model=None):
     """One encoder block (seamless): bidirectional self-attn + MLP.
 
     The addressable unit the scan in :func:`_encode` iterates and
@@ -241,10 +248,15 @@ def _enc_block_fwd(cfg: ArchConfig, p: Params, x, positions, *,
     """
     wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
     bits, lsbs = fault_bits if fault_bits is not None else (None, None)
+    fm, mw = fault_model if fault_model is not None else (None, None)
     if wr is not None:
-        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs,
+                             fault_model=fm, mbu_width=mw)
+    else:
+        p = L.dequantize_params(p)
     if ar is not None:
-        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs,
+                            fault_model=fm, mbu_width=mw)
     h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
     a = L.attention_fwd(p["attn"], h, positions, n_heads=cfg.n_heads,
                         n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
@@ -257,7 +269,7 @@ def _enc_block_fwd(cfg: ArchConfig, p: Params, x, positions, *,
 
 def _dec_block_fwd(cfg: ArchConfig, p: Params, x, positions, memory,
                    mem_pos, *, fault_rates=None, fault_bits=None,
-                   kv_chunk: int = 1024):
+                   fault_model=None, kv_chunk: int = 1024):
     """One enc-dec decoder block: causal self-attn + cross-attn + MLP.
 
     Shared by the full-sequence decoder scan in :func:`forward` and the
@@ -265,10 +277,15 @@ def _dec_block_fwd(cfg: ArchConfig, p: Params, x, positions, memory,
     """
     wr, ar, seed = fault_rates if fault_rates is not None else (None,) * 3
     bits, lsbs = fault_bits if fault_bits is not None else (None, None)
+    fm, mw = fault_model if fault_model is not None else (None, None)
     if wr is not None:
-        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs)
+        p = L.corrupt_params(p, wr, seed, bits=bits, faulty_bits=lsbs,
+                             fault_model=fm, mbu_width=mw)
+    else:
+        p = L.dequantize_params(p)
     if ar is not None:
-        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs)
+        x = L.maybe_corrupt(x, ar, seed + 1, bits=bits, faulty_bits=lsbs,
+                            fault_model=fm, mbu_width=mw)
     h = L.norm_fwd(p["ln1"], x, cfg.norm_kind)
     x = x + L.attention_fwd(
         p["attn"], h, positions, n_heads=cfg.n_heads,
@@ -441,10 +458,15 @@ class LMStepModel:
     """
 
     def __init__(self, cfg: ArchConfig, bits: int | None = None,
-                 faulty_bits: int | None = None, batch: dict | None = None):
+                 faulty_bits: int | None = None, batch: dict | None = None,
+                 fault_model: str | None = None,
+                 mbu_width: int | None = None):
         self.cfg = cfg
         self.fault_bits = None if bits is None and faulty_bits is None \
             else (bits, faulty_bits)
+        self.fault_model = None \
+            if fault_model is None and mbu_width is None \
+            else (fault_model, mbu_width)
         self.n_units = (cfg.n_enc_layers + cfg.n_layers) if cfg.is_encdec \
             else cfg.n_layers
         if cfg.is_encdec and batch is None:
@@ -506,6 +528,70 @@ class LMStepModel:
         u["head"] = params["embed"] if self.cfg.tie_embeddings \
             else params["lm_head"]
 
+    def quant_unit_params(self, params: Params) -> list[Params]:
+        """Per-unit params with every ``block`` float leaf quantized into
+        residence (``layers.QTensor``) for the ``pallas`` fault backend:
+        one int8 copy of the corruptible state instead of O(D) corrupted
+        float tables.  Plain dense contraction weights (attention
+        projections, MLP matrices — the sites ``layers.fault_dense``
+        serves) are matmul-marked so their flips happen inside the fused
+        matmul tile; everything else (norm gains, recurrent/moe/ssd
+        weights, biases) corrupts in-register at the leaf.  Boundary
+        leaves (embed / final_norm / head / enc_norm) are never
+        corrupted and stay raw floats.  QTensor leaves keep the float
+        leaves' flatten positions, so per-leaf fault seeds match the
+        generic path bit-for-bit."""
+        bits = L.FAULT_BITS if self.fault_bits is None \
+            or self.fault_bits[0] is None else self.fault_bits[0]
+
+        def matmul_pred(path, leaf):
+            if leaf.ndim != 2:
+                return False
+            keys = [getattr(e, "key", None) for e in path]
+            parent = keys[-2] if len(keys) >= 2 else None
+            if parent in ("attn", "xattn"):
+                return keys[-1] in ("wq", "wk", "wv", "wo")
+            if parent in ("mlp", "dense_mlp"):
+                return keys[-1] in ("w1", "w2", "w3")
+            return False
+
+        return [{k: (L.quantize_params(v, bits, matmul_pred=matmul_pred)
+                     if k == "block" else v) for k, v in u.items()}
+                for u in self.unit_params(params)]
+
+    def build_weight_fault_tables(self, units: list[Params],
+                                  w_rates_by_device, base_seed: int = 0):
+        """Pre-corrupt every unit's ``block`` weights once per (unit,
+        device) — the LM twin of ``models.cnn.build_weight_fault_tables``
+        for the ``tables`` fault backend.  Uses exactly the corruption
+        :meth:`step` applies inline (``layers.corrupt_params`` on the
+        block subtree, unit seed ``base_seed + 7919*i``), so
+        tables==generic stays bitwise.  Boundary leaves are replicated
+        unchanged; index leaf[d] per candidate gene to get unit *i* as
+        corrupted on device d."""
+        bits, lsbs = self.fault_bits if self.fault_bits is not None \
+            else (None, None)
+        fm, mw = self.fault_model if self.fault_model is not None \
+            else (None, None)
+        rates = [jnp.float32(r) for r in np.asarray(w_rates_by_device)]
+
+        @jax.jit
+        def _build():
+            tables = []
+            for i, u in enumerate(units):
+                variants = []
+                for r in rates:
+                    v = dict(u)
+                    v["block"] = L.corrupt_params(
+                        u["block"], r, base_seed + 7919 * i, bits=bits,
+                        faulty_bits=lsbs, fault_model=fm, mbu_width=mw)
+                    variants.append(v)
+                tables.append(jax.tree.map(lambda *vs: jnp.stack(vs),
+                                           *variants))
+            return tables
+
+        return jax.block_until_ready(_build())
+
     # -- per-unit forward ---------------------------------------------------
     def step(self, i: int, p: Params, x, wr=None, ar=None, seed=0):
         """Unit *i*'s fault injection + compute + boundary glue.
@@ -524,7 +610,8 @@ class LMStepModel:
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
         kind = cfg.block_pattern[i % len(cfg.block_pattern)]
         x, _ = _block_fwd(cfg, kind, p["block"], x, positions,
-                          fault_rates=fr, fault_bits=self.fault_bits)
+                          fault_rates=fr, fault_bits=self.fault_bits,
+                          fault_model=self.fault_model)
         if i == self.n_units - 1:
             x = _unembed_unit(cfg, p, x)
         return x
@@ -581,7 +668,8 @@ class LMStepModel:
             positions = jnp.arange(enc.shape[1], dtype=jnp.int32)
             enc = _enc_block_fwd(cfg, p["block"], enc, positions,
                                  fault_rates=fr,
-                                 fault_bits=self.fault_bits)
+                                 fault_bits=self.fault_bits,
+                                 fault_model=self.fault_model)
             if i == ne - 1:
                 return L.norm_fwd(p["enc_norm"], enc, cfg.norm_kind)
             return enc
@@ -596,7 +684,8 @@ class LMStepModel:
         positions = jnp.arange(h.shape[1], dtype=jnp.int32)
         mem_pos = jnp.arange(mem.shape[1], dtype=jnp.int32)
         h = _dec_block_fwd(cfg, p["block"], h, positions, mem, mem_pos,
-                           fault_rates=fr, fault_bits=self.fault_bits)
+                           fault_rates=fr, fault_bits=self.fault_bits,
+                           fault_model=self.fault_model)
         if j == cfg.n_layers - 1:
             return _unembed_unit(cfg, p, h)
         return {"x": h, "mem": mem}

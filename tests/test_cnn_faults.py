@@ -95,3 +95,42 @@ def test_layer_sensitivity_profile(data):
         FaultSpec(weight_fault_rate=0.4, act_fault_rate=0.4))
     assert sens.shape == (model.n_units,)
     assert (sens >= 0).all()
+
+
+def test_same_shaped_leaves_in_one_unit_get_distinct_masks():
+    """Per-leaf seed striding (seed + 977*i over ALL flattened leaves):
+    two identical same-shaped tensors in one unit must draw DIFFERENT
+    flip masks — a shared seed would corrupt them identically, hiding
+    half the fault surface (e.g. a residual block's two convs)."""
+    from repro.models.cnn import _corrupt_unit
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(3, 3, 8, 8)),
+                    jnp.float32)
+    unit = {"c1": w, "c2": w}                     # identical values
+    fp, _ = _corrupt_unit(unit, None, jnp.float32(0.5), None, 11)
+    assert not np.array_equal(np.asarray(fp["c1"]), np.asarray(fp["c2"]))
+    # determinism: same seed reproduces the same corruption
+    fp2, _ = _corrupt_unit(unit, None, jnp.float32(0.5), None, 11)
+    np.testing.assert_array_equal(np.asarray(fp["c1"]),
+                                  np.asarray(fp2["c1"]))
+
+
+def test_weight_tables_lockstep_with_inline_seeds(data):
+    """build_weight_fault_tables derives the SAME per-leaf seeds the
+    inline step path uses, so gathered == inline, bitwise — on a model
+    whose units contain same-shaped leaf pairs (resnet18 blocks)."""
+    from repro.models.cnn import build_weight_fault_tables
+    model = CNN_MODELS["resnet18"]
+    params = model.init(jax.random.PRNGKey(4), num_classes=8, width=0.25,
+                        img=16)
+    x, _ = data.batch(8, seed=6)
+    x = jnp.asarray(x)
+    n = model.n_units
+    scale = np.array([0.0, 1.0], np.float32)
+    rate = 0.3
+    tables = build_weight_fault_tables(params, rate * scale, base_seed=9)
+    P = np.array([0, 1] * (n // 2) + [1] * (n % 2))
+    gathered = [jax.tree.map(lambda t: t[P[i]], tables[i]) for i in range(n)]
+    wr = jnp.asarray(rate * scale[P], jnp.float32)
+    inline = model.apply(params, x, w_rates=wr, a_rates=None, seed=9)
+    via_tables = model.apply(gathered, x, w_rates=None, a_rates=None, seed=9)
+    np.testing.assert_array_equal(np.asarray(inline), np.asarray(via_tables))

@@ -110,6 +110,121 @@ def test_fault_matmul_zero_rate_equals_clean():
     np.testing.assert_allclose(np.asarray(out), np.asarray(clean), atol=1e-4)
 
 
+FAULT_MODELS = ["flip", "stuck0", "stuck1", "mbu"]
+
+
+@pytest.mark.parametrize("fault_model", FAULT_MODELS)
+@pytest.mark.parametrize("rate", [0.0, 1e-3, 1e-1])
+def test_bitflip_fault_models_match_ref(fault_model, rate):
+    """Differential sweep: every fault model, kernel vs oracle, exact."""
+    for shape in [(129,), (33, 17, 3)]:
+        q = jnp.asarray(RNG.integers(-100, 100, size=shape), jnp.int8)
+        out = ops.bitflip(q, 13, jnp.float32(rate), 4,
+                          fault_model=fault_model)
+        ref = ops.bitflip_ref(q, jnp.int32(13), jnp.float32(rate), 4,
+                              fault_model=fault_model)
+        assert out.dtype == q.dtype
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("fault_model", FAULT_MODELS)
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_bitflip_fault_models_match_ref(fault_model, bits):
+    """INT8 and INT4 regimes, every fault model, kernel vs oracle."""
+    x = jnp.asarray(RNG.normal(size=(65, 19)), jnp.float32)
+    spec = QuantSpec(bits=bits)
+    fb = min(4, bits)
+    out = ops.quant_bitflip(x, 21, 0.1, fb, spec, fault_model=fault_model)
+    ref = ops.quant_bitflip_ref(x, jnp.int32(21), jnp.float32(0.1), fb,
+                                spec, fault_model=fault_model)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_stuck_at_semantics():
+    """stuck0 only clears bits; stuck1 only sets bits."""
+    q = jnp.asarray(RNG.integers(-100, 100, size=(4096,)), jnp.int8)
+    s0 = np.asarray(ops.bitflip(q, 3, 0.5, 4, fault_model="stuck0"))
+    s1 = np.asarray(ops.bitflip(q, 3, 0.5, 4, fault_model="stuck1"))
+    qn = np.asarray(q)
+    np.testing.assert_array_equal(s0 & qn, s0)    # subset of q's set bits
+    np.testing.assert_array_equal(s1 | qn, s1)    # superset of q's set bits
+    assert (s0 != qn).any() and (s1 != qn).any()
+
+
+@pytest.mark.parametrize("mbu_width", [2, 3])
+def test_mbu_bursts_are_contiguous(mbu_width):
+    """Every MBU corruption is ONE contiguous run of set bits of the
+    configured width, inside the vulnerable LSB window."""
+    faulty_bits = 4
+    q = jnp.zeros((100_000,), jnp.int32)
+    out = np.asarray(ops.bitflip(q, 17, 0.05, faulty_bits,
+                                 fault_model="mbu", mbu_width=mbu_width))
+    diffs = np.unique(out[out != 0])
+    assert diffs.size > 0
+    width = min(mbu_width, faulty_bits)
+    allowed = {((1 << width) - 1) << s
+               for s in range(faulty_bits - width + 1)}
+    assert set(int(d) for d in diffs) <= allowed
+
+
+@pytest.mark.parametrize("fault_model", FAULT_MODELS)
+def test_fault_matmul_fault_models_match_ref(fault_model):
+    x = jnp.asarray(RNG.normal(size=(17, 96)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(96, 40)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(8))
+    out = ops.fault_matmul(x, qw, scale, 5, 0.1, 4, fault_model=fault_model)
+    ref = ops.fault_matmul_ref(x, qw, scale, jnp.int32(5), jnp.float32(0.1),
+                               4, fault_model=fault_model)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fault_matmul_mbu_differs_from_flip():
+    x = jnp.asarray(RNG.normal(size=(8, 64)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(8))
+    a = np.asarray(ops.fault_matmul(x, qw, scale, 5, 0.3, 4))
+    b = np.asarray(ops.fault_matmul(x, qw, scale, 5, 0.3, 4,
+                                    fault_model="mbu"))
+    assert (a != b).any()
+
+
+@pytest.mark.parametrize("lead", [(), (3,), (2, 3)])
+def test_fault_matmul_pallas_nd_and_odd_shapes(lead):
+    """The tile kernel itself handles ND / non-tile-multiple operands
+    (reshape + pad inside) instead of asserting."""
+    from repro.kernels.fault_matmul import fault_matmul_pallas
+    x = jnp.asarray(RNG.normal(size=lead + (7, 75)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(75, 33)), jnp.float32)
+    qw, scale = quantize(w, QuantSpec(8))
+    out = fault_matmul_pallas(x, qw, jnp.float32(scale), jnp.int32(3),
+                              jnp.float32(0.2), 4, interpret=True)
+    ref = ops.fault_matmul_ref(x.reshape(-1, 75), qw, scale, jnp.int32(3),
+                               jnp.float32(0.2), 4).reshape(lead + (7, 33))
+    assert out.shape == lead + (7, 33)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fault_matmul_pallas_rejects_bad_shapes():
+    from repro.kernels.fault_matmul import fault_matmul_pallas
+    x = jnp.zeros((4, 8), jnp.float32)
+    qw = jnp.zeros((9, 8), jnp.int8)          # contraction mismatch
+    with pytest.raises(ValueError):
+        fault_matmul_pallas(x, qw, jnp.float32(1), jnp.int32(0),
+                            jnp.float32(0.1), 4, interpret=True)
+    with pytest.raises(ValueError):
+        fault_matmul_pallas(x, jnp.zeros((8,), jnp.int8), jnp.float32(1),
+                            jnp.int32(0), jnp.float32(0.1), 4,
+                            interpret=True)
+
+
+def test_unknown_fault_model_raises():
+    q = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError):
+        ops.bitflip(q, 0, 0.1, 4, fault_model="cosmic")
+
+
 def test_traced_rate_single_compile():
     """One executable serves all fault rates (rates are traced)."""
     calls = {"n": 0}
